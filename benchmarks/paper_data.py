@@ -1,0 +1,118 @@
+"""Raw numbers from the paper's appendix (Dann, Ritter, Froening 2021),
+used to validate the reproduction's *relative* behaviour.
+
+Our graph suite is a scaled regeneration (SNAP is unavailable offline), so
+absolute seconds are not comparable; what must reproduce are the paper's
+scale-free claims: accelerator orderings per graph/problem, iteration-count
+relations (insight 1), bytes/edge relations (insight 2), DRAM-type speedup
+directions (insight 6), channel-scaling shapes (insights 7/8), and the
+optimization-ablation directions (Sect. 4.5).
+"""
+
+# Table 4: DDR4 single-channel runtimes (seconds), all optimizations on.
+# {graph: {accelerator: {problem: seconds}}}
+TAB4 = {
+    "sd": {"accugraph": {"bfs": 0.0017, "pr": 0.0005, "wcc": 0.0009},
+           "foregraph": {"bfs": 0.0159, "pr": 0.0009, "wcc": 0.0046},
+           "hitgraph": {"bfs": 0.0081, "pr": 0.0009, "wcc": 0.0077},
+           "thundergp": {"bfs": 0.0087, "pr": 0.0009, "wcc": 0.0078}},
+    "db": {"accugraph": {"bfs": 0.0107, "pr": 0.0014, "wcc": 0.0083},
+           "foregraph": {"bfs": 0.0268, "pr": 0.0019, "wcc": 0.0173},
+           "hitgraph": {"bfs": 0.0344, "pr": 0.0023, "wcc": 0.0348},
+           "thundergp": {"bfs": 0.0345, "pr": 0.0022, "wcc": 0.0323}},
+    "yt": {"accugraph": {"bfs": 0.0232, "pr": 0.0044, "wcc": 0.0189},
+           "foregraph": {"bfs": 0.0332, "pr": 0.0032, "wcc": 0.0256},
+           "hitgraph": {"bfs": 0.0659, "pr": 0.0076, "wcc": 0.0706},
+           "thundergp": {"bfs": 0.0940, "pr": 0.0063, "wcc": 0.0879}},
+    "pk": {"accugraph": {"bfs": 0.1154, "pr": 0.0241, "wcc": 0.0688},
+           "foregraph": {"bfs": 0.1335, "pr": 0.0225, "wcc": 0.1126},
+           "hitgraph": {"bfs": 0.3465, "pr": 0.0484, "wcc": 0.3310},
+           "thundergp": {"bfs": 0.5225, "pr": 0.0523, "wcc": 0.5239}},
+    "wt": {"accugraph": {"bfs": 0.0274, "pr": 0.0075, "wcc": 0.0236},
+           "foregraph": {"bfs": 0.0327, "pr": 0.0061, "wcc": 0.0245},
+           "hitgraph": {"bfs": 0.0601, "pr": 0.0094, "wcc": 0.0653},
+           "thundergp": {"bfs": 0.0529, "pr": 0.0066, "wcc": 0.0464}},
+    "or": {"accugraph": {"bfs": 0.4709, "pr": 0.0879, "wcc": 0.1685},
+           "foregraph": {"bfs": 0.4736, "pr": 0.0791, "wcc": 0.2791},
+           "hitgraph": {"bfs": 1.2344, "pr": 0.1831, "wcc": 1.2852},
+           "thundergp": {"bfs": 1.5718, "pr": 0.1967, "wcc": 1.5754}},
+    "lj": {"accugraph": {"bfs": 0.2650, "pr": 0.0459, "wcc": 0.2202},
+           "foregraph": {"bfs": 0.4347, "pr": 0.0396, "wcc": 0.2577},
+           "hitgraph": {"bfs": 0.7591, "pr": 0.0725, "wcc": 0.9049},
+           "thundergp": {"bfs": 0.9538, "pr": 0.0637, "wcc": 0.9555}},
+    "tw": {"accugraph": {"bfs": 10.3114, "pr": 1.9304, "wcc": 10.4346},
+           "foregraph": {"bfs": 21.7350, "pr": 2.7537, "wcc": 63.8956},
+           "hitgraph": {"bfs": 13.8804, "pr": 1.5886, "wcc": 20.0293},
+           "thundergp": {"bfs": 24.2738, "pr": 1.2539, "wcc": 66.8212}},
+    "bk": {"accugraph": {"bfs": 1.6355, "pr": 0.0033, "wcc": 1.6219},
+           "foregraph": {"bfs": 5.0959, "pr": 0.0057, "wcc": 3.2011},
+           "hitgraph": {"bfs": 3.7714, "pr": 0.0068, "wcc": 4.7490},
+           "thundergp": {"bfs": 4.0371, "pr": 0.0070, "wcc": 4.8985}},
+    "rd": {"accugraph": {"bfs": 1.3653, "pr": 0.0057, "wcc": 0.9357},
+           "foregraph": {"bfs": 8.0324, "pr": 0.0108, "wcc": 2.7803},
+           "hitgraph": {"bfs": 3.9504, "pr": 0.0086, "wcc": 4.6874},
+           "thundergp": {"bfs": 4.0059, "pr": 0.0067, "wcc": 3.6763}},
+    "r21": {"accugraph": {"bfs": 0.3174, "pr": 0.0650, "wcc": 0.3466},
+            "foregraph": {"bfs": 0.4926, "pr": 0.0681, "wcc": 0.3757},
+            "hitgraph": {"bfs": 0.9812, "pr": 0.1282, "wcc": 1.2820},
+            "thundergp": {"bfs": 1.3596, "pr": 0.1512, "wcc": 1.5147}},
+    "r24": {"accugraph": {"bfs": 1.9207, "pr": 0.2835, "wcc": 1.8342},
+            "foregraph": {"bfs": 1.3074, "pr": 0.2287, "wcc": 1.5206},
+            "hitgraph": {"bfs": 2.2484, "pr": 0.2198, "wcc": 2.7620},
+            "thundergp": {"bfs": 3.5936, "pr": 0.2401, "wcc": 3.3590}},
+}
+
+# Table 6: DDR3 / HBM single-channel BFS runtimes (seconds).
+TAB6_BFS = {
+    "sd": {"accugraph": (0.0014, 0.0017), "foregraph": (0.0131, 0.0157),
+           "hitgraph": (0.0064, 0.0090), "thundergp": (0.0070, 0.0096)},
+    "db": {"accugraph": (0.0094, 0.0114), "foregraph": (0.0221, 0.0264),
+           "hitgraph": (0.0273, 0.0382), "thundergp": (0.0289, 0.0401)},
+    "lj": {"accugraph": (0.2335, 0.2867), "foregraph": (0.3584, 0.4282),
+           "hitgraph": (0.6045, 0.8461), "thundergp": (0.7893, 1.1007)},
+    "or": {"accugraph": (0.3935, 0.4708), "foregraph": (0.3905, 0.4668),
+           "hitgraph": (0.9660, 1.3605), "thundergp": (1.2889, 1.7739)},
+    "rd": {"accugraph": (1.1917, 1.4289), "foregraph": (6.6240, 7.9176),
+           "hitgraph": (3.1720, 4.4374), "thundergp": (3.3688, 4.7319)},
+}  # (ddr3_s, hbm_s); DDR4 baseline in TAB4[...]["bfs"]
+
+# Table 7: multi-channel BFS runtimes (seconds).
+# {dram: {channels: {graph: (hitgraph_s, thundergp_s)}}}
+TAB7 = {
+    "ddr4": {
+        2: {"db": (0.0192, 0.0185), "lj": (0.3998, 0.4557),
+            "or": (0.5966, 0.6978), "rd": (1.6494, 2.3198)},
+        4: {"db": (0.0127, 0.0131), "lj": (0.2682, 0.2807),
+            "or": (0.3798, 0.3865), "rd": (0.8968, 1.7867)},
+    },
+    "hbm": {
+        8: {"db": (0.0069, 0.0108), "lj": (0.1452, 0.1926),
+            "or": (0.1934, 0.2400), "rd": (0.3792, 1.6126)},
+    },
+}
+
+# Table 8: BFS runtimes (s) with optimizations toggled, single-channel DDR4.
+# {accelerator: {optimization: {graph: seconds}}}
+TAB8 = {
+    "accugraph": {
+        "none": {"db": 0.0118, "lj": 0.3062, "or": 0.5071, "rd": 1.3834},
+        "prefetch_skipping": {"db": 0.0107, "lj": 0.3062, "or": 0.5071, "rd": 1.3834},
+        "partition_skipping": {"db": 0.0118, "lj": 0.2650, "or": 0.4709, "rd": 1.3670},
+    },
+    "foregraph": {
+        "none": {"db": 0.0263, "lj": 0.9428, "or": 2.0590, "rd": 15.6424},
+        "edge_shuffling": {"db": 0.0936, "lj": 3.3837, "or": 5.5188, "rd": 86.4302},
+        "shard_skipping": {"db": 0.0191, "lj": 0.6594, "or": 1.3149, "rd": 4.9896},
+        "stride_mapping": {"db": 0.0268, "lj": 0.4347, "or": 0.4736, "rd": 8.0324},
+    },
+    "hitgraph": {
+        "none": {"db": 0.1594, "lj": 4.1306, "or": 7.1937, "rd": 4.7238},
+        "partition_skipping": {"db": 0.1455, "lj": 2.7382, "or": 5.8026, "rd": 4.3559},
+        "edge_sorting": {"db": 0.0284, "lj": 0.8422, "or": 1.1732, "rd": 1.8639},
+        "update_combining": {"db": 0.0149, "lj": 0.4318, "or": 0.4883, "rd": 1.1849},
+        "update_filtering": {"db": 0.1081, "lj": 3.0243, "or": 4.2361, "rd": 3.1239},
+    },
+}
+
+PROBLEMS_TAB4 = ("bfs", "pr", "wcc")
+ACCELS = ("accugraph", "foregraph", "hitgraph", "thundergp")

@@ -1,0 +1,106 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run result JSONs (results/dryrun vs results/dryrun_baseline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*", "*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | step | compute (ms) | memory (ms) | collective (ms) "
+        "| dominant | MODEL/HLO flops | temp GiB/chip |",
+        "|---|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for (arch, shape, m), r in sorted(
+        recs.items(), key=lambda kv: (kv[0][0], order.index(kv[0][1]))
+    ):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | | | | *skipped: "
+                         f"{r['reason'].split('(')[0].strip()}* | | |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {r['step_kind']} "
+            f"| {rl['compute_s']*1e3:,.1f} | {rl['memory_s']*1e3:,.1f} "
+            f"| {rl['collective_s']*1e3:,.1f} | **{rl['dominant']}** "
+            f"| {r.get('useful_flops_ratio') or 0:.3f} "
+            f"| {r['memory'].get('temp_bytes', 0)/2**30:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_summary(recs):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = len(recs) - ok - sk
+    compile_s = sum(r.get("compile_s", 0) for r in recs.values() if r["status"] == "ok")
+    return ok, sk, er, compile_s
+
+
+def compare_table(base, opt):
+    """Baseline vs optimized for the three hillclimbed pairs."""
+    pairs = [
+        ("qwen2_moe_a2_7b", "train_4k"),
+        ("arctic_480b", "train_4k"),
+        ("qwen3_0_6b", "decode_32k"),
+    ]
+    lines = [
+        "| pair | term | baseline | optimized | delta |",
+        "|---|---|---:|---:|---:|",
+    ]
+    for arch, shape in pairs:
+        b = base.get((arch, shape, "single"))
+        o = opt.get((arch, shape, "single"))
+        if not b or not o or b["status"] != "ok" or o["status"] != "ok":
+            continue
+        rows = [
+            ("compute s", b["roofline"]["compute_s"], o["roofline"]["compute_s"]),
+            ("memory s", b["roofline"]["memory_s"], o["roofline"]["memory_s"]),
+            ("collective s", b["roofline"]["collective_s"], o["roofline"]["collective_s"]),
+            ("HLO flops/dev", b["hlo_analysis"]["flops_per_device"],
+             o["hlo_analysis"]["flops_per_device"]),
+            ("traffic GiB/dev", b["hlo_analysis"]["bytes_per_device"] / 2**30,
+             o["hlo_analysis"]["bytes_per_device"] / 2**30),
+            ("coll GiB/dev", b["hlo_analysis"]["collective_bytes_per_device"] / 2**30,
+             o["hlo_analysis"]["collective_bytes_per_device"] / 2**30),
+        ]
+        for name, bv, ov in rows:
+            delta = (bv / ov) if ov else float("inf")
+            lines.append(f"| {arch} x {shape} | {name} | {bv:,.3g} | {ov:,.3g} "
+                         f"| {delta:,.2f}x |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    opt = load("results/dryrun")
+    base = load("results/dryrun_baseline")
+    ok, sk, er, cs = dryrun_summary(opt)
+    print(f"## generated tables\ncells: {ok} ok, {sk} skipped, {er} errors; "
+          f"total compile {cs:.0f}s\n")
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "roofline"):
+        print("### single-pod roofline (optimized)\n")
+        print(roofline_table(opt, "single"))
+        print("\n### multi-pod (2x16x16)\n")
+        print(roofline_table(opt, "multi"))
+    if which in ("all", "compare") and base:
+        print("\n### before/after (hillclimbed pairs)\n")
+        print(compare_table(base, opt))

@@ -1,0 +1,47 @@
+"""Memory-technology study (paper Sect. 4.4): one graph, three DRAM types,
+plus the optimization ablation (Sect. 4.5) — the paper's core experiment in
+one script.
+
+    PYTHONPATH=src python examples/dram_study.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.graphsim import NONE, default_config
+from repro.core.accelerators.base import AccelConfig, run_accelerator
+from repro.core.dram import dram_config
+from repro.graph.generators import preferential
+from repro.graph.problems import BFS
+
+
+def main():
+    g = preferential(20000, 12, seed=5, name="social20k")
+    root = 9
+    print(f"graph: n={g.n} m={g.m}\n")
+
+    print("--- DRAM types (BFS, all optimizations) ---")
+    print(f"{'accelerator':12s} {'DDR4':>10s} {'DDR3':>10s} {'HBM':>10s}  (runtime; insight 6)")
+    for accel in ("accugraph", "foregraph", "hitgraph", "thundergp"):
+        times = []
+        for dram in ("default", "ddr3", "hbm"):
+            rep = run_accelerator(accel, g, BFS, root=root,
+                                  dram=dram_config(dram),
+                                  config=default_config(accel))
+            times.append(rep.runtime_s)
+        print(f"{accel:12s} {times[0]*1e3:8.2f}ms {times[1]*1e3:8.2f}ms "
+              f"{times[2]*1e3:8.2f}ms")
+
+    print("\n--- HitGraph optimization ablation (BFS, DDR4) ---")
+    for name, opts in [("none", NONE),
+                       ("edge_sorting", frozenset({"edge_sorting"})),
+                       ("+update_combining", frozenset({"edge_sorting", "update_combining"})),
+                       ("all", frozenset({"all"}))]:
+        cfg = AccelConfig(interval_size=16384, optimizations=opts)
+        rep = run_accelerator("hitgraph", g, BFS, root=root, dram="default",
+                              config=cfg)
+        print(f"{name:20s} {rep.runtime_s*1e3:8.2f}ms  "
+              f"(updates written: {sum(s.updates_written for s in rep.per_iteration)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""End-to-end LM training: a ~25M-parameter qwen3-family model for a few
+hundred steps on the synthetic corpus, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+(Same driver as the production launcher; `python -m repro.launch.train
+--arch qwen3_0_6b --d-model 640 --layers 12 --steps 300` trains the ~100M
+variant — wall-time bound on CPU, identical code path on a pod.)
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    sys.argv = [
+        "train", "--arch", "qwen3_0_6b", "--reduced",
+        "--d-model", "256", "--layers", "6",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_example_ckpt", "--ckpt-every", "50",
+    ]
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

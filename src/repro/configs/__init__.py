@@ -1,0 +1,5 @@
+"""Config registry: the 10 assigned LM architectures + the paper's own
+graph-accelerator simulation presets."""
+from repro.configs.base import ArchConfig, ARCH_REGISTRY, get_arch, list_archs
+
+__all__ = ["ArchConfig", "ARCH_REGISTRY", "get_arch", "list_archs"]

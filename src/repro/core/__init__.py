@@ -1,0 +1,45 @@
+"""Core of the paper's contribution: a memory-access simulation environment
+for graph processing accelerators (Dann, Ritter, Froening 2021).
+
+The environment follows the paper's central observation: off-chip memory
+access dominates graph-accelerator performance, so on-chip data flow need not
+be simulated cycle-accurately.  Accelerator models therefore generate their
+off-chip *request traces* (type, address, volume, ordering) which are played
+through a DRAM timing model (a vectorised, TPU-native re-design of
+Ramulator's bank state machines — see DESIGN.md for the hardware-adaptation
+notes).
+"""
+from repro.core.dram import DRAMConfig, DRAM_CONFIGS, dram_config
+from repro.core.trace import (
+    Trace,
+    seq_read,
+    seq_write,
+    random_read,
+    random_write,
+    coalesce,
+    concat,
+    round_robin,
+    proportional_interleave,
+)
+from repro.core.engine import simulate_dram, TimingReport
+from repro.core.metrics import SimReport
+from repro.core.memory_layout import MemoryLayout
+
+__all__ = [
+    "DRAMConfig",
+    "DRAM_CONFIGS",
+    "dram_config",
+    "Trace",
+    "seq_read",
+    "seq_write",
+    "random_read",
+    "random_write",
+    "coalesce",
+    "concat",
+    "round_robin",
+    "proportional_interleave",
+    "simulate_dram",
+    "TimingReport",
+    "SimReport",
+    "MemoryLayout",
+]

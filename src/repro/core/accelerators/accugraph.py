@@ -1,0 +1,162 @@
+"""AccuGraph model (Yao et al., PACT'18) — paper Sect. 3.2.1, Fig. 4.
+
+Vertex-centric, pull-based data flow on a horizontally partitioned CSR of
+the inverted edges, immediate update propagation.
+
+Partitioning: the vertex set is divided into k source intervals; partition p
+holds the in-CSR restricted to edges whose *source* lies in interval p,
+indexed by destination (hence the full n+1 pointer array per partition —
+paper insight 4).  Per-partition request flow:
+
+  1. prefetch the partition's n/k source-interval values (sequential;
+     skipped when the on-chip partition already equals it — k == 1 after
+     the first iteration: *prefetch skipping*),
+  2. values + pointers of all destination vertices, sequentially, the two
+     streams merged round-robin (when k == 1 the destination values are the
+     on-chip values, so only pointers are read),
+  3. neighbors (CSR indices) sequentially, one edge materialised per
+     neighbor,
+  4. changed destination values written back (filter abstraction),
+streams 2-4 merged by priority -> modelled as proportional interleave.
+
+Immediate propagation: partitions are processed in order within an
+iteration and updates are applied to the live value array (Gauss-Seidel),
+which converges in fewer iterations for min-propagation problems
+(insight 1).  *Partition skipping*: a partition is skipped when none of its
+source-interval values changed since it was last processed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.accelerators.base import (
+    AccelConfig,
+    Accelerator,
+    INF,
+    PhasedTrace,
+    accumulate_np,
+    edge_candidates_np,
+)
+from repro.core.memory_layout import MemoryLayout
+from repro.core.metrics import IterationStats
+from repro.core.trace import (
+    Trace,
+    concat,
+    proportional_interleave,
+    random_write,
+    round_robin,
+    seq_read,
+)
+from repro.graph.partition import horizontal_partition
+from repro.graph.problems import Problem
+from repro.graph.structure import Graph
+
+
+class AccuGraph(Accelerator):
+    name = "accugraph"
+    default_dram = "accugraph"
+    supports_weights = False
+    supports_multichannel = False
+
+    def _execute(self, g: Graph, problem: Problem, root: int):
+        cfg = self.config
+        parts = horizontal_partition(g, cfg.interval_size, by="src")
+        k = parts.k
+        layout = MemoryLayout()
+        layout.alloc("values", g.n * 4)
+        for p in range(k):
+            layout.alloc(f"ptrs{p}", (g.n + 1) * 4)
+            layout.alloc(f"neigh{p}", max(len(parts.edge_idx[p]), 1) * 4)
+
+        values = problem.init_values(g, root)
+        src_deg = g.degrees_out.astype(np.float32) if problem.name == "pr" else None
+        # Per-partition edge arrays (sorted by destination = CSR order).
+        part_edges = []
+        for p in range(k):
+            idx = parts.edge_idx[p]
+            order = np.argsort(g.dst[idx], kind="stable")
+            idx = idx[order]
+            part_edges.append((g.src[idx], g.dst[idx]))
+
+        pt = PhasedTrace()
+        stats: list[IterationStats] = []
+        dirty = np.ones(k, dtype=bool)  # source-interval changed since last visit
+        onchip_partition = -1  # which interval currently resides in BRAM
+        skip_part = cfg.has("partition_skipping") and problem.kind == "min"
+        skip_pref = cfg.has("prefetch_skipping")
+        iters = 0
+
+        if problem.kind == "acc":
+            base_const = (1.0 - 0.85) / g.n if problem.name == "pr" else 0.0
+
+        for _ in range(cfg.max_iters):
+            iters += 1
+            st = IterationStats(partitions_total=k)
+            iter_trace: list[Trace] = []
+            any_change = False
+            if problem.kind == "acc":
+                snapshot = values.copy()
+                values = np.full(g.n, base_const, dtype=np.float32)
+
+            for p in range(k):
+                if skip_part and not dirty[p]:
+                    st.partitions_skipped += 1
+                    continue
+                dirty[p] = False
+                src, dst = part_edges[p]
+                lo, hi = parts.interval(p)
+
+                # --- semantics ---
+                src_vals = (snapshot if problem.kind == "acc" else values)[src]
+                if problem.kind == "min":
+                    cand = edge_candidates_np(problem, src_vals, None, None)
+                    acc = accumulate_np(problem, cand, dst, g.n)
+                    new = np.minimum(values, acc)
+                    changed = new < values
+                else:
+                    cand = edge_candidates_np(
+                        problem, src_vals, None,
+                        src_deg[src] if src_deg is not None else None,
+                    )
+                    acc = accumulate_np(problem, cand, dst, g.n)
+                    scale = 0.85 if problem.name == "pr" else 1.0
+                    values = values + np.float32(scale) * acc
+                    changed = np.zeros(g.n, dtype=bool)
+                    changed[np.unique(dst)] = True
+                    new = values
+                if problem.kind == "min":
+                    values = new
+                    if changed.any():
+                        any_change = True
+                        dirty[np.unique(changed.nonzero()[0] // cfg.interval_size)] = True
+
+                # --- trace ---
+                streams = []
+                if not (skip_pref and onchip_partition == p):
+                    streams.append(seq_read(layout.base("values") + lo * 4, (hi - lo) * 4))
+                    st.values_read += hi - lo
+                onchip_partition = p
+                ptrs = seq_read(layout.base(f"ptrs{p}"), (g.n + 1) * 4)
+                if k > 1:
+                    dst_vals = seq_read(layout.base("values"), g.n * 4)
+                    st.values_read += g.n
+                    valptr = round_robin(dst_vals, ptrs)
+                else:
+                    valptr = ptrs
+                neigh = seq_read(layout.base(f"neigh{p}"), len(src) * 4)
+                st.edges_read += len(src)
+                wchanged = changed.nonzero()[0]
+                writes = random_write(layout.base("values"), wchanged, 4)
+                st.values_written += len(wchanged)
+                body = proportional_interleave(valptr, neigh, writes)
+                streams.append(body)
+                iter_trace.append(concat(*streams))
+
+            pt.add_phase([concat(*iter_trace)] if iter_trace else [Trace.empty()])
+            stats.append(st)
+            if problem.single_iteration:
+                break
+            if problem.kind == "min" and (not any_change or (skip_part and not dirty.any())):
+                break
+
+        return values, iters, pt, stats

@@ -1,0 +1,184 @@
+"""Shared machinery for accelerator models.
+
+Semantic execution runs host-side in numpy (this mirrors the paper's C++
+simulation environment: trace generation is itself an offline preprocessing
+step), while DRAM timing runs through the JAX engine / Pallas kernel.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+
+import numpy as np
+
+from repro.core.dram import DRAMConfig, dram_config
+from repro.core.engine import TimingReport, simulate_channel_fast, simulate_channel_scan
+from repro.core.metrics import IterationStats, SimReport
+from repro.core.trace import Trace
+from repro.graph.problems import Problem
+from repro.graph.structure import Graph
+
+INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelConfig:
+    """Accelerator-model configuration.
+
+    interval_size: vertices per interval (the scaled BRAM capacity).
+    n_pes: processing elements (ForeGraph) / channels (HitGraph, ThunderGP).
+    optimizations: which of the accelerator's optimizations are on.  "all"
+      enables every optimization the accelerator proposes (paper default).
+    engine: DRAM engine selection ("auto" | "scan" | "fast").
+    """
+
+    interval_size: int = 16384
+    n_pes: int = 1
+    optimizations: frozenset = frozenset({"all"})
+    engine: str = "auto"
+    max_iters: int = 4000
+    scan_cutoff: int = 2_000_000
+
+    def has(self, opt: str) -> bool:
+        return "all" in self.optimizations or opt in self.optimizations
+
+
+# ---- numpy semantic helpers -------------------------------------------------
+
+
+def edge_candidates_np(
+    problem: Problem,
+    src_vals: np.ndarray,
+    weights: np.ndarray | None,
+    src_deg: np.ndarray | None,
+) -> np.ndarray:
+    if problem.name == "bfs":
+        return src_vals + np.float32(1.0)
+    if problem.name == "wcc":
+        return src_vals
+    if problem.name == "sssp":
+        return src_vals + weights
+    if problem.name == "pr":
+        return src_vals / np.maximum(src_deg, 1.0).astype(np.float32)
+    if problem.name == "spmv":
+        w = weights if weights is not None else np.float32(1.0)
+        return src_vals * w
+    raise ValueError(problem.name)
+
+
+def accumulate_np(problem: Problem, cand: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    if problem.kind == "min":
+        acc = np.full(n, INF, dtype=np.float32)
+        np.minimum.at(acc, dst, cand)
+    else:
+        acc = np.zeros(n, dtype=np.float32)
+        np.add.at(acc, dst, cand)
+    return acc
+
+
+@dataclasses.dataclass
+class PhasedTrace:
+    """Traces organised as [phase][channel]; phases are barriers (an
+    iteration, or a scatter/gather phase within one)."""
+
+    phases: list[list[Trace]] = dataclasses.field(default_factory=list)
+
+    def add_phase(self, channel_traces: list[Trace]):
+        if any(t.n for t in channel_traces):
+            self.phases.append(channel_traces)
+
+
+def simulate_phased(pt: PhasedTrace, cfg: DRAMConfig, accel_cfg: AccelConfig) -> TimingReport:
+    """Time = sum over phases of (max over channels); stats summed."""
+    total = TimingReport.zero()
+    time_ns = 0.0
+    for channel_traces in pt.phases:
+        phase_time = 0.0
+        for tr in channel_traces:
+            if tr.n == 0:
+                continue
+            if accel_cfg.engine == "scan" or (
+                accel_cfg.engine == "auto" and tr.n <= accel_cfg.scan_cutoff
+            ):
+                r = simulate_channel_scan(tr, cfg)
+            else:
+                r = simulate_channel_fast(tr, cfg)
+            phase_time = max(phase_time, r.time_ns)
+            total.hits += r.hits
+            total.misses += r.misses
+            total.conflicts += r.conflicts
+            total.bytes_total += r.bytes_total
+            total.bytes_read += r.bytes_read
+            total.bytes_written += r.bytes_written
+            total.requests += r.requests
+        time_ns += phase_time
+    total.time_ns = time_ns
+    total.cycles = int(time_ns / cfg.tCK_ns) if time_ns else 0
+    total.channels_used = max((len(p) for p in pt.phases), default=0)
+    peak = time_ns * cfg.bw_per_channel * max(cfg.channels, 1)
+    total.bw_utilization = total.bytes_total / max(peak, 1e-9)
+    return total
+
+
+class Accelerator(abc.ABC):
+    """Base accelerator model.
+
+    Subclasses implement ``_execute`` which performs the semantic iteration
+    under the accelerator's scheme and fills a PhasedTrace + IterationStats.
+    """
+
+    name: str = "base"
+    default_dram: str = "default"
+    supports_weights: bool = False
+    supports_multichannel: bool = False
+
+    def __init__(self, config: AccelConfig | None = None):
+        self.config = config or AccelConfig()
+
+    @abc.abstractmethod
+    def _execute(
+        self, g: Graph, problem: Problem, root: int
+    ) -> tuple[np.ndarray, int, PhasedTrace, list[IterationStats]]:
+        ...
+
+    def run(
+        self,
+        g: Graph,
+        problem: Problem,
+        root: int = 0,
+        dram: DRAMConfig | str | None = None,
+    ) -> SimReport:
+        if problem.needs_weights and not self.supports_weights:
+            raise ValueError(f"{self.name} does not support weighted problems")
+        if isinstance(dram, str):
+            dram = dram_config(dram)
+        dram = dram or dram_config(self.default_dram)
+        gp = problem.prepare_graph(g)
+        values, iters, pt, stats = self._execute(gp, problem, root)
+        timing = simulate_phased(pt, dram, self.config)
+        return SimReport(
+            accelerator=self.name,
+            graph=g.name,
+            problem=problem.name,
+            dram=dram.name,
+            n=gp.n,
+            m=gp.m,
+            timing=timing,
+            iterations=iters,
+            per_iteration=stats,
+            values=values,
+        )
+
+
+def run_accelerator(
+    name: str,
+    g: Graph,
+    problem: Problem,
+    root: int = 0,
+    dram: str | DRAMConfig | None = None,
+    config: AccelConfig | None = None,
+) -> SimReport:
+    from repro.core.accelerators import ACCELERATORS
+
+    cls = ACCELERATORS[name]
+    return cls(config).run(g, problem, root=root, dram=dram)

@@ -1,0 +1,186 @@
+"""ForeGraph model (Dai et al., FPGA'17) — paper Sect. 3.2.2, Fig. 5.
+
+Edge-centric on interval-shard (GridGraph-style) partitioning with a
+compressed edge list (two 16-bit local vertex ids per edge -> 4 bytes/edge;
+possible because intervals are limited to 65,536 vertices), immediate update
+propagation, p processing elements sharing memory round-robin.
+
+Per iteration: for each source interval i (PE i % p): prefetch interval i's
+values sequentially; for each shard (i, j): prefetch destination interval j,
+read the shard's edges sequentially, then write the destination interval
+back sequentially.  All off-chip requests are sequential; random vertex
+value accesses are served on-chip.
+
+Optimizations (paper Sect. 4.5):
+- shard skipping:  skip shards whose source interval did not change,
+- stride mapping:  rename vertices with a constant stride to balance
+  interval degrees,
+- edge shuffling:  zip the edge lists of p consecutive destination shards
+  into one (padding with null edges) so p PEs stream one merged list —
+  alone this *hurts* (padding => more edges read, aggravated by partition
+  skew), combined with stride mapping the padding shrinks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.accelerators.base import (
+    Accelerator,
+    PhasedTrace,
+    accumulate_np,
+    edge_candidates_np,
+)
+from repro.core.memory_layout import MemoryLayout
+from repro.core.metrics import IterationStats
+from repro.core.trace import (
+    Trace,
+    concat,
+    proportional_interleave,
+    seq_read,
+    seq_write,
+)
+from repro.graph.partition import interval_shard_partition, stride_mapping
+from repro.graph.problems import Problem
+from repro.graph.structure import Graph
+
+
+class ForeGraph(Accelerator):
+    name = "foregraph"
+    default_dram = "foregraph"
+    supports_weights = False
+    supports_multichannel = False
+
+    def __init__(self, config=None):
+        super().__init__(config)
+        if self.config.interval_size > 65536:
+            raise ValueError("ForeGraph intervals are limited to 65,536 vertices")
+
+    def _execute(self, g: Graph, problem: Problem, root: int):
+        cfg = self.config
+        n_pes = max(cfg.n_pes, 1)
+        interval = min(cfg.interval_size, 65536)
+
+        inverse = None
+        if cfg.has("stride_mapping"):
+            q_est = max(1, -(-g.n // interval))
+            perm = stride_mapping(g.n, q_est)
+            inverse = np.empty(g.n, dtype=np.int64)
+            inverse[perm] = np.arange(g.n)
+            g = g.renamed(perm)
+            root = int(perm[root])
+
+        shards = interval_shard_partition(g, interval)
+        q = shards.q
+        layout = MemoryLayout()
+        layout.alloc("values", g.n * 4)
+        sizes = shards.shard_sizes()
+        for i in range(q):
+            for j in range(q):
+                if sizes[i, j]:
+                    layout.alloc(f"sh{i}_{j}", int(sizes[i, j]) * 4)  # 4B compressed edges
+
+        values = problem.init_values(g, root)
+        src_deg = g.degrees_out.astype(np.float32) if problem.name == "pr" else None
+
+        shuffle = cfg.has("edge_shuffling") and n_pes > 1
+        skip = cfg.has("shard_skipping") and problem.kind == "min"
+        dirty = np.ones(q, dtype=bool)
+        pt = PhasedTrace()
+        stats: list[IterationStats] = []
+        iters = 0
+
+        base_const = (1.0 - 0.85) / g.n if problem.name == "pr" else 0.0
+
+        for _ in range(cfg.max_iters):
+            iters += 1
+            st = IterationStats(partitions_total=q * q)
+            any_change = False
+            pe_traces: list[list[Trace]] = [[] for _ in range(n_pes)]
+            if problem.kind == "acc":
+                snapshot = values.copy()
+                values = np.full(g.n, base_const, dtype=np.float32)
+
+            for i in range(q):
+                if skip and not dirty[i]:
+                    st.partitions_skipped += q
+                    continue
+                dirty[i] = False
+                pe = i % n_pes
+                lo_i, hi_i = shards.interval(i)
+                pe_traces[pe].append(
+                    seq_read(layout.base("values") + lo_i * 4, (hi_i - lo_i) * 4)
+                )
+                st.values_read += hi_i - lo_i
+
+                # group destination shards for edge shuffling
+                j_groups = (
+                    [list(range(jj, min(jj + n_pes, q))) for jj in range(0, q, n_pes)]
+                    if shuffle
+                    else [[j] for j in range(q)]
+                )
+                for group in j_groups:
+                    group = [j for j in group if sizes[i, j] > 0]
+                    if not group:
+                        continue
+                    pad = max(int(sizes[i, j]) for j in group) if shuffle else 0
+                    for j in group:
+                        src, dst = shards.shard(i, j)
+                        lo_j, hi_j = shards.interval(j)
+                        # --- semantics (immediate across shards) ---
+                        sv = (snapshot if problem.kind == "acc" else values)[src]
+                        if problem.kind == "min":
+                            cand = edge_candidates_np(problem, sv, None, None)
+                            acc = accumulate_np(problem, cand, dst, g.n)
+                            new = np.minimum(values, acc)
+                            changed = (new < values).nonzero()[0]
+                            values = new
+                            if len(changed):
+                                any_change = True
+                                dirty[np.unique(changed // interval)] = True
+                        else:
+                            cand = edge_candidates_np(
+                                problem, sv, None,
+                                src_deg[src] if src_deg is not None else None,
+                            )
+                            acc = accumulate_np(problem, cand, dst, g.n)
+                            scale = 0.85 if problem.name == "pr" else 1.0
+                            values = values + np.float32(scale) * acc
+
+                        # --- trace (all sequential) ---
+                        n_edges = pad if shuffle else int(sizes[i, j])
+                        tr = concat(
+                            seq_read(layout.base("values") + lo_j * 4, (hi_j - lo_j) * 4),
+                            seq_read(layout.base(f"sh{i}_{j}"), n_edges * 4),
+                            seq_write(layout.base("values") + lo_j * 4, (hi_j - lo_j) * 4),
+                        )
+                        st.values_read += hi_j - lo_j
+                        st.values_written += hi_j - lo_j
+                        st.edges_read += n_edges
+                        pe_traces[pe].append(tr)
+
+            # PEs share the single memory channel round-robin (Sect. 3.2.2);
+            # concurrently-streaming PEs -> proportional interleave.
+            pe_cat = [concat(*trs) for trs in pe_traces if trs]
+            if pe_cat:
+                merged = pe_cat[0] if len(pe_cat) == 1 else proportional_interleave(*pe_cat)
+                pt.add_phase([merged])
+            stats.append(st)
+            if problem.single_iteration:
+                break
+            if problem.kind == "min" and (not any_change or (skip and not dirty.any())):
+                break
+
+        if inverse is not None:
+            # values are indexed by renamed ids; out[old] = values[perm[old]]
+            # where perm = argsort(inverse) (inverse[new] = old).
+            values = values[np.argsort(inverse)]
+            if problem.name == "wcc":
+                # WCC values ARE vertex ids: the fixed point in renamed space
+                # labels components by min *renamed* id.  Canonicalise to the
+                # reference labelling (min original id per component).
+                leaders = values.astype(np.int64)  # renamed leader per vertex
+                uniq, comp_of = np.unique(leaders, return_inverse=True)
+                min_orig = np.full(len(uniq), np.iinfo(np.int64).max)
+                np.minimum.at(min_orig, comp_of, np.arange(g.n))
+                values = min_orig[comp_of].astype(np.float32)
+        return values, iters, pt, stats

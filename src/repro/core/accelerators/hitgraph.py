@@ -1,0 +1,223 @@
+"""HitGraph model (Zhou et al., TPDS'19) — paper Sect. 3.2.3, Fig. 6.
+
+Edge-centric on a horizontally partitioned (by source interval) edge list,
+2-phase update propagation, p processing elements — one per memory channel;
+partitions are statically assigned to channels.
+
+Per iteration: the controller schedules all k partitions for the *scatter*
+phase (produce updates), then all for the *gather* phase (apply updates).
+
+Scatter(partition i): prefetch the partition's n/k source values
+sequentially, then read its ~m/k edges sequentially (8B unweighted / 12B
+weighted); each edge produces an update routed through the crossbar to the
+destination partition's update queue (sequential, cache-line coalesced
+writes on the destination partition's channel).
+
+Gather(partition j): prefetch n/k values, read partition j's update queues
+sequentially, apply and write back changed values (coalesced, with
+locality when edges were sorted by destination).
+
+Optimizations (paper Sect. 4.5): partition skipping; edge sorting by
+destination (gather write locality); update combining (updates with equal
+destination combined -> u < |V| x p); update filtering (bitmap of
+vertices changed last iteration; edges from inactive sources produce no
+update).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.accelerators.base import (
+    Accelerator,
+    INF,
+    PhasedTrace,
+    accumulate_np,
+    edge_candidates_np,
+)
+from repro.core.memory_layout import MemoryLayout
+from repro.core.metrics import IterationStats
+from repro.core.trace import (
+    Trace,
+    concat,
+    proportional_interleave,
+    random_write,
+    seq_read,
+    seq_write,
+)
+from repro.graph.partition import horizontal_partition
+from repro.graph.problems import Problem
+from repro.graph.structure import Graph
+
+
+class HitGraph(Accelerator):
+    name = "hitgraph"
+    default_dram = "hitgraph"
+    supports_weights = True
+    supports_multichannel = True
+
+    def _execute(self, g: Graph, problem: Problem, root: int):
+        cfg = self.config
+        p = max(cfg.n_pes, 1)  # PEs == channels
+        parts = horizontal_partition(g, cfg.interval_size, by="src")
+        k = parts.k
+        edge_bytes = 12 if (g.weighted and problem.needs_weights) else 8
+
+        sort_opt = cfg.has("edge_sorting")
+        combine_opt = cfg.has("update_combining") and sort_opt
+        filter_opt = cfg.has("update_filtering") and problem.kind == "min"
+        skip_opt = cfg.has("partition_skipping") and problem.kind == "min"
+
+        # Channel-local layouts; partition i lives on channel i % p.
+        layouts = [MemoryLayout() for _ in range(p)]
+        part_edges = []
+        for i in range(k):
+            idx = parts.edge_idx[i]
+            if sort_opt:
+                idx = idx[np.argsort(g.dst[idx], kind="stable")]
+            part_edges.append(idx)
+            ch = i % p
+            layouts[ch].alloc(f"vals{i}", (parts.interval(i)[1] - parts.interval(i)[0]) * 4)
+            layouts[ch].alloc(f"edges{i}", max(len(idx), 1) * edge_bytes)
+        for j in range(k):
+            # update queue for destination partition j (written by all PEs)
+            layouts[j % p].alloc(f"upd{j}", max(g.m, 1) * 8)
+
+        values = problem.init_values(g, root)
+        src_deg = g.degrees_out.astype(np.float32) if problem.name == "pr" else None
+        active = np.ones(g.n, dtype=bool)  # bitmap: changed last iteration
+        dirty = np.ones(k, dtype=bool)
+        pt = PhasedTrace()
+        stats: list[IterationStats] = []
+        iters = 0
+
+        for _ in range(cfg.max_iters):
+            iters += 1
+            st = IterationStats(partitions_total=k)
+            # ---------------- scatter ----------------
+            scatter_traces: list[list[Trace]] = [[] for _ in range(p)]
+            # update buffers per destination partition: (dst, value)
+            upd_dst: list[list[np.ndarray]] = [[] for _ in range(k)]
+            upd_val: list[list[np.ndarray]] = [[] for _ in range(k)]
+            upd_q_len = np.zeros(k, dtype=np.int64)
+
+            for i in range(k):
+                if skip_opt and not dirty[i]:
+                    st.partitions_skipped += 1
+                    continue
+                ch = i % p
+                idx = part_edges[i]
+                src, dst = g.src[idx], g.dst[idx]
+                w = g.weights[idx] if (g.weighted and problem.needs_weights) else None
+                lo, hi = parts.interval(i)
+
+                if filter_opt:
+                    keep = active[src]
+                    src_k, dst_k = src[keep], dst[keep]
+                    w_k = w[keep] if w is not None else None
+                else:
+                    src_k, dst_k, w_k = src, dst, w
+
+                cand = edge_candidates_np(problem, values[src_k], w_k,
+                                          src_deg[src_k] if src_deg is not None else None)
+                # route updates to destination partitions
+                if len(dst_k):
+                    jkey = dst_k // cfg.interval_size
+                    order = np.argsort(jkey, kind="stable")
+                    jb = np.searchsorted(jkey[order], np.arange(k + 1))
+                    for j in range(k):
+                        sl = order[jb[j] : jb[j + 1]]
+                        if not len(sl):
+                            continue
+                        d, v = dst_k[sl], cand[sl]
+                        if combine_opt:
+                            # combine updates with equal destination
+                            if problem.kind == "min":
+                                acc = np.full(g.n, INF, dtype=np.float32)
+                                np.minimum.at(acc, d, v)
+                            else:
+                                acc = np.zeros(g.n, dtype=np.float32)
+                                np.add.at(acc, d, v)
+                            d = np.unique(d)
+                            v = acc[d]
+                        upd_dst[j].append(d)
+                        upd_val[j].append(v)
+
+                # trace: prefetch -> edges -> update writes (concurrent)
+                pre = seq_read(layouts[ch].base(f"vals{i}"), (hi - lo) * 4)
+                edges_tr = seq_read(layouts[ch].base(f"edges{i}"), len(idx) * edge_bytes)
+                st.values_read += hi - lo
+                st.edges_read += len(idx)
+                scatter_traces[ch].append(concat(pre, edges_tr))
+
+            # update-queue writes happen on the owning channel, sequential
+            upd_write_traces: list[list[Trace]] = [[] for _ in range(p)]
+            for j in range(k):
+                if upd_dst[j]:
+                    nupd = sum(len(a) for a in upd_dst[j])
+                    upd_q_len[j] = nupd
+                    st.updates_written += nupd
+                    upd_write_traces[j % p].append(
+                        seq_write(layouts[j % p].base(f"upd{j}"), nupd * 8)
+                    )
+            scatter_phase = []
+            for ch in range(p):
+                rd = concat(*scatter_traces[ch]) if scatter_traces[ch] else Trace.empty()
+                wr = concat(*upd_write_traces[ch]) if upd_write_traces[ch] else Trace.empty()
+                scatter_phase.append(proportional_interleave(rd, wr))
+            pt.add_phase(scatter_phase)
+
+            # ---------------- gather ----------------
+            if problem.kind == "acc":
+                base_const = (1.0 - 0.85) / g.n if problem.name == "pr" else 0.0
+                new_values = np.full(g.n, base_const, dtype=np.float32)
+            else:
+                new_values = values.copy()
+            any_change = False
+            changed_global = np.zeros(g.n, dtype=bool)
+            gtr: list[list[Trace]] = [[] for _ in range(p)]
+            for j in range(k):
+                if upd_q_len[j] == 0:
+                    continue
+                ch = j % p
+                lo, hi = parts.interval(j)
+                d = np.concatenate(upd_dst[j])
+                v = np.concatenate(upd_val[j])
+                st.updates_read += len(d)
+                if problem.kind == "min":
+                    acc = np.full(g.n, INF, dtype=np.float32)
+                    np.minimum.at(acc, d, v)
+                    nv = np.minimum(new_values, acc)
+                    changed = (nv < new_values).nonzero()[0]
+                    new_values = nv
+                    changed_global[changed] = True
+                    if len(changed):
+                        any_change = True
+                else:
+                    np.add.at(new_values, d, v if problem.name != "pr" else np.float32(0.85) * v)
+                    changed = np.unique(d)
+
+                pre = seq_read(layouts[ch].base(f"vals{j}"), (hi - lo) * 4)
+                upd_rd = seq_read(layouts[ch].base(f"upd{j}"), int(upd_q_len[j]) * 8)
+                # value writes: in update order (sorted by dst when Sort. on)
+                wr_idx = changed if problem.kind == "min" else changed
+                writes = random_write(layouts[ch].base(f"vals{j}"), wr_idx - lo, 4)
+                st.values_read += hi - lo
+                st.values_written += len(wr_idx)
+                gtr[ch].append(concat(pre, proportional_interleave(upd_rd, writes)))
+            gather_phase = [concat(*trs) if trs else Trace.empty() for trs in gtr]
+            pt.add_phase(gather_phase)
+
+            if problem.kind == "acc":
+                values = new_values  # damping applied per-update above
+                stats.append(st)
+                break  # single iteration
+            dirty = np.zeros(k, dtype=bool)
+            ch_parts = np.unique(changed_global.nonzero()[0] // cfg.interval_size)
+            dirty[ch_parts] = True
+            active = changed_global
+            values = new_values
+            stats.append(st)
+            if not any_change:
+                break
+
+        return values, iters, pt, stats

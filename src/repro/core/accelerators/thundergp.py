@@ -1,0 +1,170 @@
+"""ThunderGP model (Chen et al., FPGA'21) — paper Sect. 3.2.4, Fig. 7.
+
+Edge-centric on a vertically partitioned (by destination interval), sorted
+edge list, 2-phase update propagation.  The graph is partitioned into k
+destination intervals; each partition is split into p chunks (p = number of
+memory channels).  Every channel holds the *whole* vertex value set, its
+chunk of each partition, and an update set (memory footprint
+n*c + m + n*c — insight 9).
+
+Per iteration, for each partition: a scatter-gather phase per channel
+(prefetch the partition's destination values sequentially; read the chunk's
+edges sequentially; per edge load its source value — semi-sequential since
+edges are sorted by source, with an on-chip buffer filtering duplicate
+source reads; finally write the chunk's partial destination values back as
+updates), then an apply phase (read all channels' updates sequentially,
+combine, and write the result to every channel's value copy — many
+duplicate reads and writes; insight 8: sub-linear channel scaling).
+
+Optimization: offline chunk-to-channel scheduling by a greedy execution-time
+heuristic (paper: little effect).  Zero-degree vertex removal is disabled,
+as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.accelerators.base import (
+    Accelerator,
+    INF,
+    PhasedTrace,
+    edge_candidates_np,
+)
+from repro.core.memory_layout import MemoryLayout
+from repro.core.metrics import IterationStats
+from repro.core.trace import (
+    Trace,
+    concat,
+    proportional_interleave,
+    random_read,
+    seq_read,
+    seq_write,
+)
+from repro.graph.partition import vertical_partition
+from repro.graph.problems import Problem
+from repro.graph.structure import Graph
+
+
+class ThunderGP(Accelerator):
+    name = "thundergp"
+    default_dram = "thundergp"
+    supports_weights = True
+    supports_multichannel = True
+
+    def _execute(self, g: Graph, problem: Problem, root: int):
+        cfg = self.config
+        p = max(cfg.n_pes, 1)  # channels
+        parts = vertical_partition(g, cfg.interval_size, n_chunks=p)
+        k = parts.k
+        edge_bytes = 12 if (g.weighted and problem.needs_weights) else 8
+
+        # Optional offline chunk scheduling: reassign chunks to channels by
+        # greedy longest-processing-time balancing of edge counts.
+        chunk_of = [[c for c in range(p)] for _ in range(k)]
+        if cfg.has("chunk_scheduling") and p > 1:
+            for i in range(k):
+                sizes = [(len(parts.edge_idx[i][c]), c) for c in range(p)]
+                sizes.sort(reverse=True)
+                loads = [0] * p
+                assign = [0] * p
+                for sz, c in sizes:
+                    tgt = int(np.argmin(loads))
+                    loads[tgt] += sz
+                    assign[c] = tgt
+                chunk_of[i] = assign
+
+        layouts = [MemoryLayout() for _ in range(p)]
+        for ch in range(p):
+            layouts[ch].alloc("values", g.n * 4)  # full copy per channel
+            for i in range(k):
+                layouts[ch].alloc(f"edges{i}", max(len(parts.edge_idx[i][0]), 1) * edge_bytes)
+                lo, hi = parts.interval(i)
+                layouts[ch].alloc(f"upd{i}", (hi - lo) * 4)
+
+        values = problem.init_values(g, root)
+        src_deg = g.degrees_out.astype(np.float32) if problem.name == "pr" else None
+        pt = PhasedTrace()
+        stats: list[IterationStats] = []
+        iters = 0
+
+        for _ in range(cfg.max_iters):
+            iters += 1
+            st = IterationStats(partitions_total=k)
+            any_change = False
+            if problem.kind == "acc":
+                base_const = (1.0 - 0.85) / g.n if problem.name == "pr" else 0.0
+                new_values = np.full(g.n, base_const, dtype=np.float32)
+            else:
+                new_values = values.copy()
+
+            for i in range(k):
+                lo, hi = parts.interval(i)
+                ni = hi - lo
+                # ---- scatter-gather per channel (parallel) ----
+                sg_phase: list[Trace] = [Trace.empty() for _ in range(p)]
+                partials = []
+                for c in range(p):
+                    idx = parts.edge_idx[i][c]
+                    ch = chunk_of[i][c]
+                    src, dst = g.src[idx], g.dst[idx]
+                    w = g.weights[idx] if (g.weighted and problem.needs_weights) else None
+
+                    # semantics: chunk partial accumulation over dst interval
+                    cand = edge_candidates_np(
+                        problem, values[src], w,
+                        src_deg[src] if src_deg is not None else None,
+                    )
+                    if problem.kind == "min":
+                        acc = np.full(ni, INF, dtype=np.float32)
+                        np.minimum.at(acc, dst - lo, cand)
+                    else:
+                        acc = np.zeros(ni, dtype=np.float32)
+                        np.add.at(acc, dst - lo, cand)
+                    partials.append(acc)
+
+                    # trace: prefetch dst values; edges; semi-sequential
+                    # source value loads (sorted by src, duplicates filtered
+                    # by the vertex value buffer); update writes
+                    pre = seq_read(layouts[ch].base("values") + lo * 4, ni * 4)
+                    edges_tr = seq_read(layouts[ch].base(f"edges{i}"), len(idx) * edge_bytes)
+                    usrc = np.unique(src)  # sorted ascending = semi-sequential
+                    src_rd = random_read(layouts[ch].base("values"), usrc, 4)
+                    upd_wr = seq_write(layouts[ch].base(f"upd{i}"), ni * 4)
+                    st.values_read += ni + len(usrc)
+                    st.edges_read += len(idx)
+                    st.updates_written += ni
+                    sg_phase[ch] = concat(
+                        pre, proportional_interleave(edges_tr, src_rd), upd_wr
+                    )
+                pt.add_phase(sg_phase)
+
+                # ---- apply (combine chunk partials, write to all copies) ----
+                if problem.kind == "min":
+                    comb = np.minimum.reduce(partials) if partials else np.full(ni, INF)
+                    nv = np.minimum(new_values[lo:hi], comb)
+                    changed = nv < new_values[lo:hi]
+                    new_values[lo:hi] = nv
+                    if changed.any():
+                        any_change = True
+                else:
+                    comb = np.sum(partials, axis=0)
+                    scale = 0.85 if problem.name == "pr" else 1.0
+                    new_values[lo:hi] += np.float32(scale) * comb
+
+                apply_phase: list[Trace] = []
+                for c in range(p):
+                    upd_rd = seq_read(layouts[c].base(f"upd{i}"), ni * 4)
+                    val_wr = seq_write(layouts[c].base("values") + lo * 4, ni * 4)
+                    st.updates_read += ni
+                    st.values_written += ni
+                    apply_phase.append(concat(upd_rd, val_wr))
+                pt.add_phase(apply_phase)
+
+            values = new_values
+            stats.append(st)
+            if problem.single_iteration:
+                break
+            if problem.kind == "min" and not any_change:
+                break
+
+        return values, iters, pt, stats

@@ -1,0 +1,116 @@
+"""DRAM device models: DDR3, DDR4 and HBM (paper Tab. 3).
+
+The timing model is a deliberately simplified (cycle-approximate) re-design
+of Ramulator's per-bank state machines, keeping exactly the effects the
+paper studies:
+
+- row-buffer locality: a request is a *hit* (row open), *miss* (bank
+  precharged/idle: +activate) or *conflict* (different row open: +precharge
+  +activate), with the paper's example latencies (11ns serve, +11ns
+  activate, +11ns precharge, >=28ns between row switches in a bank);
+- bank-level parallelism: bank latencies overlap, the shared per-channel
+  data bus serialises line transfers (64-byte lines, 8n prefetch; HBM: 4n
+  with a 128-bit bus — also 64B lines, but half the row-buffer size);
+- channel-level parallelism: channels are fully independent.
+
+All timing is carried in integer memory-clock cycles (tCK = 2000/data_rate
+ns) so the engine can run in int32 on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMConfig:
+    name: str
+    standard: str  # DDR3 | DDR4 | HBM
+    channels: int
+    ranks: int
+    banks_per_rank: int  # DDR3: 8, DDR4: 16 (4 groups x 4), HBM: 16
+    data_rate: int  # MT/s
+    bw_per_channel: float  # GB/s
+    size_mbit: int
+    row_buffer_bytes: int
+    line_bytes: int = 64
+    # timing in ns (paper's reference numbers)
+    tCL_ns: float = 11.0
+    tRCD_ns: float = 11.0
+    tRP_ns: float = 11.0
+    tRC_ns: float = 28.0  # min latency between row switches (activates)
+
+    @property
+    def tCK_ns(self) -> float:
+        return 2000.0 / self.data_rate
+
+    def ns_to_cycles(self, ns: float) -> int:
+        return max(1, round(ns / self.tCK_ns))
+
+    @property
+    def tCL(self) -> int:
+        return self.ns_to_cycles(self.tCL_ns)
+
+    @property
+    def tRCD(self) -> int:
+        return self.ns_to_cycles(self.tRCD_ns)
+
+    @property
+    def tRP(self) -> int:
+        return self.ns_to_cycles(self.tRP_ns)
+
+    @property
+    def tRC(self) -> int:
+        return self.ns_to_cycles(self.tRC_ns)
+
+    @property
+    def tBL(self) -> int:
+        """Cycles the data bus is occupied by one 64B line transfer."""
+        ns = self.line_bytes / self.bw_per_channel  # GB/s == B/ns
+        return max(1, round(ns / self.tCK_ns))
+
+    @property
+    def nbanks(self) -> int:
+        """Total independently-schedulable banks per channel."""
+        return self.ranks * self.banks_per_rank
+
+    @property
+    def lines_per_row(self) -> int:
+        return self.row_buffer_bytes // self.line_bytes
+
+    def timing_cycles(self) -> dict[str, int]:
+        return dict(tCL=self.tCL, tRCD=self.tRCD, tRP=self.tRP, tRC=self.tRC, tBL=self.tBL)
+
+
+def _ddr4(name: str, channels: int, size_mbit: int) -> DRAMConfig:
+    return DRAMConfig(
+        name=name, standard="DDR4", channels=channels, ranks=1, banks_per_rank=16,
+        data_rate=2400, bw_per_channel=19.2, size_mbit=size_mbit, row_buffer_bytes=8192,
+    )
+
+
+# Tab. 3 of the paper.
+DRAM_CONFIGS: dict[str, DRAMConfig] = {
+    "accugraph": _ddr4("accugraph", 1, 2048),
+    "foregraph": _ddr4("foregraph", 1, 4096),
+    "hitgraph": DRAMConfig(
+        name="hitgraph", standard="DDR3", channels=4, ranks=2, banks_per_rank=8,
+        data_rate=1600, bw_per_channel=12.8, size_mbit=8192, row_buffer_bytes=8192,
+    ),
+    "thundergp": _ddr4("thundergp", 4, 16384),
+    "default": _ddr4("default", 1, 16384),
+    "ddr3": DRAMConfig(
+        name="ddr3", standard="DDR3", channels=1, ranks=1, banks_per_rank=8,
+        data_rate=2133, bw_per_channel=17.1, size_mbit=8192, row_buffer_bytes=8192,
+    ),
+    "hbm": DRAMConfig(
+        name="hbm", standard="HBM", channels=1, ranks=1, banks_per_rank=16,
+        data_rate=1000, bw_per_channel=16.0, size_mbit=4096, row_buffer_bytes=2048,
+    ),
+}
+
+
+def dram_config(name: str, channels: int | None = None) -> DRAMConfig:
+    cfg = DRAM_CONFIGS[name]
+    if channels is not None:
+        cfg = dataclasses.replace(cfg, channels=channels)
+    return cfg

@@ -1,0 +1,281 @@
+"""DRAM timing engines.
+
+Two engines with identical request-level semantics:
+
+1. ``simulate_channel_scan`` — the exact sequential model (``jax.lax.scan``
+   over requests, carrying per-bank state).  This is the correctness oracle
+   (``kernels/dram_timing/ref.py`` re-exports it) and the default for small
+   and medium traces.
+
+2. ``simulate_channel_fast`` — a fully-vectorised analytic model: row
+   hit/miss/conflict classification is *exact* (it only depends on the
+   previous request to the same bank, computable with a stable sort), and
+   the execution time is approximated as the max of the bus-occupancy bound
+   and the busiest-bank latency bound.  Used for very long traces; its
+   error against the scan engine is reported in EXPERIMENTS.md.
+
+The TPU-native production implementation of engine (1) is the Pallas kernel
+in ``repro/kernels/dram_timing`` (blocked request streaming HBM->VMEM with
+bank state held in VMEM scratch across sequential grid steps).
+
+Bank mapping (row-interleaved): line -> (col, bank, row) with
+``col = line % lines_per_row``, ``bank = (line / lines_per_row) % nbanks``,
+``row = line / (lines_per_row * nbanks)`` — sequential streams fill a row
+buffer, then activate the next bank (as on real devices with open-page
+policy and row:bank:col address mapping).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dram import DRAMConfig
+from repro.core.trace import Trace
+
+
+@dataclasses.dataclass
+class TimingReport:
+    time_ns: float
+    cycles: int
+    hits: int
+    misses: int
+    conflicts: int
+    bytes_total: int
+    bytes_read: int
+    bytes_written: int
+    requests: int
+    channels_used: int
+    bw_utilization: float  # achieved / peak over the busy window
+
+    @staticmethod
+    def zero() -> "TimingReport":
+        return TimingReport(0.0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0.0)
+
+
+def decode(lines: np.ndarray, cfg: DRAMConfig) -> tuple[np.ndarray, np.ndarray]:
+    """line index -> (bank, row) under the row-interleaved mapping."""
+    lpr = cfg.lines_per_row
+    nb = cfg.nbanks
+    bank = (lines // lpr) % nb
+    row = lines // (lpr * nb)
+    return bank.astype(np.int32), row.astype(np.int32)
+
+
+@partial(jax.jit, static_argnames=("nbanks", "tCL", "tRCD", "tRP", "tRC", "tBL", "lookahead"))
+def _scan_engine(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
+    """Exact sequential engine.  All times in int32 memory-clock cycles.
+
+    Pipelined model: column reads from an open row stream back-to-back at
+    the bus rate (tBL per 64B line); precharge/activate for misses and
+    conflicts overlap earlier transfers up to a bounded controller
+    *lookahead* window (finite request queue), and activates in one bank
+    respect tRC.  Per-bank state: open row, time the row can serve its
+    first column (row_ready), last data-slot end (last_data), last
+    activate (last_act); the channel data bus serialises transfers.
+
+      hit:      slot = max(row_ready[b], bus_free) .. +tBL
+      miss:     t_act = max(last_act[b]+tRC, last_data[b], bus_free-W)
+      conflict: t_pre = max(last_data[b], bus_free-W)
+                t_act = max(t_pre+tRP, last_act[b]+tRC)
+      (then row_ready[b] = t_act + tRCD and served as a hit)
+
+    The constant final column latency tCL is added once at the end.
+    """
+    n = bank.shape[0]
+
+    def step(carry, req):
+        open_row, row_ready, last_data, last_act, bus_free, hits, misses, conflicts = carry
+        b, r = req
+        valid = b >= 0  # padding requests (b == -1) are no-ops
+        b = jnp.maximum(b, 0)
+        cur = open_row[b]
+        is_hit = (cur == r) & valid
+        is_miss = (cur == jnp.int32(-1)) & valid
+        is_conf = valid & ~is_hit & ~is_miss
+
+        horizon = jnp.maximum(bus_free - lookahead, 0)
+        t_pre = jnp.maximum(last_data[b], horizon)
+        t_act_conf = jnp.maximum(t_pre + tRP, last_act[b] + tRC)
+        t_act_miss = jnp.maximum(jnp.maximum(last_act[b] + tRC, last_data[b]), horizon)
+        t_act = jnp.where(is_conf, t_act_conf, t_act_miss)
+        new_row_ready = jnp.where(is_hit, row_ready[b], t_act + tRCD)
+
+        slot_start = jnp.maximum(new_row_ready, bus_free)
+        slot_end = slot_start + tBL
+        new_bus_free = jnp.where(valid, slot_end, bus_free)
+
+        open_row = jnp.where(valid, open_row.at[b].set(r), open_row)
+        row_ready = jnp.where(valid, row_ready.at[b].set(new_row_ready), row_ready)
+        last_data = jnp.where(valid, last_data.at[b].set(slot_end), last_data)
+        last_act = jnp.where(
+            is_hit | ~valid, last_act, last_act.at[b].set(t_act)
+        )
+        hits = hits + is_hit
+        misses = misses + is_miss
+        conflicts = conflicts + is_conf
+        return (open_row, row_ready, last_data, last_act, new_bus_free,
+                hits, misses, conflicts), None
+
+    init = (
+        jnp.full((nbanks,), -1, dtype=jnp.int32),
+        jnp.zeros((nbanks,), dtype=jnp.int32),
+        jnp.zeros((nbanks,), dtype=jnp.int32),
+        jnp.full((nbanks,), -(tRC + 1), dtype=jnp.int32),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
+    )
+    carry, _ = jax.lax.scan(step, init, (bank, row))
+    bus_free, hits, misses, conflicts = carry[4], carry[5], carry[6], carry[7]
+    return bus_free + tCL, hits, misses, conflicts
+
+
+def classify_fast(bank: np.ndarray, row: np.ndarray, nbanks: int) -> np.ndarray:
+    """Exact hit(0)/miss(1)/conflict(2) classification, vectorised.
+
+    A request's class depends only on the previous request to the same bank
+    (open-page policy), independent of timing."""
+    n = len(bank)
+    if n == 0:
+        return np.zeros(0, dtype=np.int8)
+    order = np.argsort(bank, kind="stable")
+    sb, sr = bank[order], row[order]
+    prev_same = np.empty(n, dtype=np.int64)
+    prev_same[0] = -1
+    same_bank = sb[1:] == sb[:-1]
+    cls_sorted = np.full(n, 1, dtype=np.int8)  # first touch of a bank: miss
+    hit = np.zeros(n, dtype=bool)
+    conf = np.zeros(n, dtype=bool)
+    hit[1:] = same_bank & (sr[1:] == sr[:-1])
+    conf[1:] = same_bank & (sr[1:] != sr[:-1])
+    cls_sorted[hit] = 0
+    cls_sorted[conf] = 2
+    cls = np.empty(n, dtype=np.int8)
+    cls[order] = cls_sorted
+    return cls
+
+
+def _pad_pow2(bank: np.ndarray, row: np.ndarray, minimum: int = 256):
+    """Pad request arrays to the next power of two so the jitted scan engine
+    compiles once per size class instead of once per trace length."""
+    n = len(bank)
+    target = minimum
+    while target < n:
+        target *= 2
+    pad = target - n
+    if pad:
+        bank = np.concatenate([bank, np.full(pad, -1, dtype=bank.dtype)])
+        row = np.concatenate([row, np.zeros(pad, dtype=row.dtype)])
+    return bank, row
+
+
+def simulate_channel_scan(trace: Trace, cfg: DRAMConfig) -> TimingReport:
+    if trace.n == 0:
+        return TimingReport.zero()
+    bank, row = decode(trace.lines, cfg)
+    bank, row = _pad_pow2(bank, row)
+    t = cfg.timing_cycles()
+    cycles, hits, misses, conflicts = _scan_engine(
+        jnp.asarray(bank), jnp.asarray(row), cfg.nbanks,
+        t["tCL"], t["tRCD"], t["tRP"], t["tRC"], t["tBL"],
+        lookahead=16 * t["tBL"],
+    )
+    cycles = int(cycles)
+    time_ns = cycles * cfg.tCK_ns
+    peak_bytes = time_ns * cfg.bw_per_channel  # GB/s == B/ns
+    return TimingReport(
+        time_ns=time_ns,
+        cycles=cycles,
+        hits=int(hits),
+        misses=int(misses),
+        conflicts=int(conflicts),
+        bytes_total=trace.bytes,
+        bytes_read=trace.read_bytes,
+        bytes_written=trace.write_bytes,
+        requests=trace.n,
+        channels_used=1,
+        bw_utilization=trace.bytes / max(peak_bytes, 1e-9),
+    )
+
+
+def simulate_channel_fast(trace: Trace, cfg: DRAMConfig) -> TimingReport:
+    """Analytic engine: exact request classification, approximate time.
+
+    time ~= max( bus bound, busiest-bank latency bound ) where the bank
+    bound accounts for tRC-limited back-to-back activates."""
+    if trace.n == 0:
+        return TimingReport.zero()
+    bank, row = decode(trace.lines, cfg)
+    cls = classify_fast(bank, row, cfg.nbanks)
+    t = cfg.timing_cycles()
+    hits = int((cls == 0).sum())
+    misses = int((cls == 1).sum())
+    conflicts = int((cls == 2).sum())
+
+    bus_bound = trace.n * t["tBL"]
+    # per-bank serial chain: hits stream at the bus rate; a miss costs
+    # max(tRC, tRCD+tBL) in its bank, a conflict max(tRC, tRP+tRCD+tBL)
+    # (matching the scan engine's per-bank dependency chain).
+    miss_cost = max(t["tRC"], t["tRCD"] + t["tBL"])
+    conf_cost = max(t["tRC"], t["tRP"] + t["tRCD"] + t["tBL"])
+    act_cost = np.where(cls == 0, t["tBL"], np.where(cls == 1, miss_cost, conf_cost))
+    per_bank = np.bincount(bank, weights=act_cost, minlength=cfg.nbanks)
+    bank_bound = int(per_bank.max())
+    cycles = int(max(bus_bound, bank_bound)) + t["tCL"]
+    time_ns = cycles * cfg.tCK_ns
+    peak_bytes = time_ns * cfg.bw_per_channel
+    return TimingReport(
+        time_ns=time_ns,
+        cycles=cycles,
+        hits=hits,
+        misses=misses,
+        conflicts=conflicts,
+        bytes_total=trace.bytes,
+        bytes_read=trace.read_bytes,
+        bytes_written=trace.write_bytes,
+        requests=trace.n,
+        channels_used=1,
+        bw_utilization=trace.bytes / max(peak_bytes, 1e-9),
+    )
+
+
+def simulate_dram(
+    traces: list[Trace],
+    cfg: DRAMConfig,
+    engine: str = "auto",
+    scan_cutoff: int = 2_000_000,
+) -> TimingReport:
+    """Simulate one trace per channel; total time = max over channels
+    (channels operate independently); stats are summed."""
+    assert len(traces) <= cfg.channels, (
+        f"{len(traces)} traces for {cfg.channels}-channel {cfg.name}"
+    )
+    reports = []
+    for tr in traces:
+        if engine == "scan" or (engine == "auto" and tr.n <= scan_cutoff):
+            reports.append(simulate_channel_scan(tr, cfg))
+        else:
+            reports.append(simulate_channel_fast(tr, cfg))
+    if not reports:
+        return TimingReport.zero()
+    time_ns = max(r.time_ns for r in reports)
+    tot_bytes = sum(r.bytes_total for r in reports)
+    peak = time_ns * cfg.bw_per_channel * len(reports)
+    return TimingReport(
+        time_ns=time_ns,
+        cycles=max(r.cycles for r in reports),
+        hits=sum(r.hits for r in reports),
+        misses=sum(r.misses for r in reports),
+        conflicts=sum(r.conflicts for r in reports),
+        bytes_total=tot_bytes,
+        bytes_read=sum(r.bytes_read for r in reports),
+        bytes_written=sum(r.bytes_written for r in reports),
+        requests=sum(r.requests for r in reports),
+        channels_used=len(reports),
+        bw_utilization=tot_bytes / max(peak, 1e-9),
+    )

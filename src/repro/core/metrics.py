@@ -1,0 +1,89 @@
+"""Simulation reports and the paper's performance metrics (Sect. 4.1).
+
+- MTEPS (Graph500): |E| / t_exec — normalised to graph size.
+- MREPS: edges *read during execution* / t_exec — raw edge processing rate.
+- bytes/edge, values read per iteration, edges read per iteration,
+  iterations — the four critical metrics of Fig. 9.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine import TimingReport
+
+
+@dataclasses.dataclass
+class IterationStats:
+    edges_read: int = 0
+    values_read: int = 0  # number of vertex-value reads (4B each pre-coalesce)
+    values_written: int = 0
+    updates_read: int = 0
+    updates_written: int = 0
+    partitions_skipped: int = 0
+    partitions_total: int = 0
+
+
+@dataclasses.dataclass
+class SimReport:
+    accelerator: str
+    graph: str
+    problem: str
+    dram: str
+    n: int
+    m: int
+    timing: TimingReport
+    iterations: int
+    per_iteration: list[IterationStats]
+    values: np.ndarray | None = None  # final vertex values (for validation)
+
+    @property
+    def runtime_s(self) -> float:
+        return self.timing.time_ns * 1e-9
+
+    @property
+    def mteps(self) -> float:
+        return self.m / max(self.timing.time_ns * 1e-3, 1e-12)  # |E| / us == MTEPS
+
+    @property
+    def edges_read_total(self) -> int:
+        return sum(s.edges_read for s in self.per_iteration)
+
+    @property
+    def values_read_total(self) -> int:
+        return sum(s.values_read for s in self.per_iteration)
+
+    @property
+    def mreps(self) -> float:
+        return self.edges_read_total / max(self.timing.time_ns * 1e-3, 1e-12)
+
+    @property
+    def bytes_per_edge(self) -> float:
+        """Total off-chip traffic per |E| (Fig. 9(b))."""
+        return self.timing.bytes_total / max(self.m, 1)
+
+    @property
+    def edges_read_per_iteration(self) -> float:
+        return self.edges_read_total / max(self.iterations, 1)
+
+    @property
+    def values_read_per_iteration(self) -> float:
+        return self.values_read_total / max(self.iterations, 1)
+
+    def row(self) -> dict:
+        return dict(
+            accelerator=self.accelerator,
+            graph=self.graph,
+            problem=self.problem,
+            dram=self.dram,
+            runtime_s=self.runtime_s,
+            mteps=self.mteps,
+            mreps=self.mreps,
+            iterations=self.iterations,
+            bytes_per_edge=self.bytes_per_edge,
+            row_hits=self.timing.hits,
+            row_misses=self.timing.misses,
+            row_conflicts=self.timing.conflicts,
+            bw_utilization=self.timing.bw_utilization,
+        )

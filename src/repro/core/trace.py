@@ -1,0 +1,156 @@
+"""Off-chip request traces and the paper's memory-access abstractions.
+
+A Trace is a struct-of-arrays of cache-line requests in program order:
+line addresses (int64 line index, i.e. byte address >> 6) and a write flag.
+Traces are assembled host-side in numpy (like the paper's C++ simulation
+environment prepares request streams) and handed to the device engine.
+
+The combinators mirror the paper's Sect. 2.2 / 3.2 abstractions:
+
+- ``coalesce``: the *cache line* abstraction — merges adjacent requests to
+  the same cache line into one.
+- ``filtered`` writes: the *filter* abstraction — unchanged values are never
+  written (callers pass only changed indices).
+- ``round_robin``: merge streams 1:1 (AccuGraph's value+pointer streams).
+- ``proportional_interleave``: merge streams produced concurrently by
+  pipeline stages at rates proportional to their lengths (approximates the
+  paper's priority merging without cycle-level arbitration; the locality
+  disruption from switching streams — the effect under study — is kept).
+- ``concat``: sequential phases (e.g. prefetch completes before edge
+  reading starts, per the control-flow dependencies in Figs. 4-7).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+LINE = 64
+
+
+@dataclasses.dataclass
+class Trace:
+    """Cache-line request trace in program order (one DRAM channel)."""
+
+    lines: np.ndarray  # int64 line indices
+    is_write: np.ndarray  # bool
+
+    def __post_init__(self):
+        self.lines = np.asarray(self.lines, dtype=np.int64)
+        self.is_write = np.asarray(self.is_write, dtype=bool)
+        assert self.lines.shape == self.is_write.shape
+
+    @property
+    def n(self) -> int:
+        return int(self.lines.shape[0])
+
+    @property
+    def bytes(self) -> int:
+        return self.n * LINE
+
+    @property
+    def read_bytes(self) -> int:
+        return int((~self.is_write).sum()) * LINE
+
+    @property
+    def write_bytes(self) -> int:
+        return int(self.is_write.sum()) * LINE
+
+    @staticmethod
+    def empty() -> "Trace":
+        return Trace(np.zeros(0, dtype=np.int64), np.zeros(0, dtype=bool))
+
+
+def _lines_for_span(base: int, nbytes: int) -> np.ndarray:
+    """Cache lines touched by a sequential [base, base+nbytes) access."""
+    if nbytes <= 0:
+        return np.zeros(0, dtype=np.int64)
+    first = base // LINE
+    last = (base + nbytes - 1) // LINE
+    return np.arange(first, last + 1, dtype=np.int64)
+
+
+def seq_read(base: int, nbytes: int) -> Trace:
+    lines = _lines_for_span(base, nbytes)
+    return Trace(lines, np.zeros(len(lines), dtype=bool))
+
+
+def seq_write(base: int, nbytes: int) -> Trace:
+    lines = _lines_for_span(base, nbytes)
+    return Trace(lines, np.ones(len(lines), dtype=bool))
+
+
+def _random_lines(base: int, indices: np.ndarray, width: int) -> np.ndarray:
+    addr = base + indices.astype(np.int64) * width
+    return addr // LINE
+
+
+def random_read(base: int, indices: np.ndarray, width: int, coalesced: bool = True) -> Trace:
+    lines = _random_lines(base, indices, width)
+    t = Trace(lines, np.zeros(len(lines), dtype=bool))
+    return coalesce(t) if coalesced else t
+
+
+def random_write(base: int, indices: np.ndarray, width: int, coalesced: bool = True) -> Trace:
+    lines = _random_lines(base, indices, width)
+    t = Trace(lines, np.ones(len(lines), dtype=bool))
+    return coalesce(t) if coalesced else t
+
+
+def coalesce(t: Trace) -> Trace:
+    """Cache-line abstraction: merge *adjacent* requests to the same line."""
+    if t.n == 0:
+        return t
+    keep = np.ones(t.n, dtype=bool)
+    same = (t.lines[1:] == t.lines[:-1]) & (t.is_write[1:] == t.is_write[:-1])
+    keep[1:] = ~same
+    return Trace(t.lines[keep], t.is_write[keep])
+
+
+def concat(*traces: Trace) -> Trace:
+    traces = [t for t in traces if t.n > 0]
+    if not traces:
+        return Trace.empty()
+    return Trace(
+        np.concatenate([t.lines for t in traces]),
+        np.concatenate([t.is_write for t in traces]),
+    )
+
+
+def _interleave_by_position(traces: list[Trace], positions: list[np.ndarray]) -> Trace:
+    lines = np.concatenate([t.lines for t in traces])
+    wr = np.concatenate([t.is_write for t in traces])
+    pos = np.concatenate(positions)
+    order = np.argsort(pos, kind="stable")
+    return Trace(lines[order], wr[order])
+
+
+def round_robin(*traces: Trace) -> Trace:
+    """Merge streams 1:1 (requests beyond the shortest stream follow)."""
+    traces = [t for t in traces if t.n > 0]
+    if not traces:
+        return Trace.empty()
+    k = len(traces)
+    positions = [np.arange(t.n, dtype=np.float64) * k + i for i, t in enumerate(traces)]
+    return _interleave_by_position(traces, positions)
+
+
+def proportional_interleave(*traces: Trace) -> Trace:
+    """Merge concurrently-produced streams at rates proportional to length.
+
+    Stream i's j-th request is placed at virtual time j / len_i, so all
+    streams start and finish together — the steady-state behaviour of the
+    paper's pipelined producers with priority arbitration."""
+    traces = [t for t in traces if t.n > 0]
+    if not traces:
+        return Trace.empty()
+    positions = [
+        (np.arange(t.n, dtype=np.float64) + 0.5) / t.n + i * 1e-12
+        for i, t in enumerate(traces)
+    ]
+    return _interleave_by_position(traces, positions)
+
+
+def split_round_robin(t: Trace, k: int) -> list[Trace]:
+    """Deal a trace across k channels line-by-line (round-robin share)."""
+    return [Trace(t.lines[i::k], t.is_write[i::k]) for i in range(k)]

@@ -1,0 +1,12 @@
+"""Distribution: mesh axes, parameter/activation/cache sharding rules, and
+collective helpers for the production meshes (single-pod 16x16, multi-pod
+2x16x16)."""
+from repro.distributed.sharding import (
+    batch_axes,
+    batch_specs,
+    cache_specs,
+    param_specs,
+    shardings,
+)
+
+__all__ = ["batch_axes", "batch_specs", "cache_specs", "param_specs", "shardings"]

@@ -1,0 +1,122 @@
+"""Activation-sharding policy, threaded to model code without plumbing the
+mesh through every layer.
+
+GSPMD propagates operand shardings, but two of our parameter placements
+conflict with batch sharding on the same mesh axis (FSDP shards weight
+contraction dims over "data", which also carries the batch): left alone,
+the partitioner resolves the tie by replicating the *batch* — catastrophic
+for the loss path (full-batch logits per device).  The launcher installs a
+policy; model code calls ``constrain(x, kind)`` at the few points that pin
+propagation the right way (embedding output, block boundaries, logits).
+
+Outside a policy (CPU smoke tests, single-device examples) ``constrain`` is
+an exact no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class ActivationPolicy:
+    """kind -> sharding for with_sharding_constraint.
+
+    Holds the mesh so constraints are NamedShardings (no ambient-mesh
+    context needed at trace time)."""
+
+    def __init__(self, mesh, batch_axes, model_axis: str = "model",
+                 sequence_parallel: bool = False):
+        self.mesh = mesh
+        self.batch = batch_axes
+        self.model = model_axis
+        self.sequence_parallel = sequence_parallel
+
+    def axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(name, 1)
+
+    def spec(self, kind: str, ndim: int) -> Optional[P]:
+        b, m = self.batch, self.model
+        if kind == "btd":  # (B, S, D) residual-stream activations
+            if self.sequence_parallel:
+                return P(b, m, None)
+            return P(b, None, None)
+        if kind == "logits":  # (B, S, V) — vocab model-sharded
+            return P(b, None, m)
+        if kind == "tokens":  # (B, S)
+            return P(b, None)
+        if kind == "attn_q":  # (B, Sq, kv, group, hd) — kv-heads TP-sharded
+            # Pins the attention einsums to head parallelism.  Without it,
+            # archs whose head count does not divide the model axis (arctic
+            # 56H, qwen2 28H) get the CONTRACTION sharded instead and GSPMD
+            # all-reduces the full S x S logits (measured 490 GiB/device/step
+            # on arctic train_4k).  WSC pads non-divisible head counts.
+            return P(b, None, m, None, None)
+        if kind == "attn_kv":  # (B, Sk, kv, hd)
+            return P(b, None, m, None)
+        # GShard-style MoE sharding (§Perf iteration 2b): groups sharded
+        # over (DP x model) so the dispatch/return between the g-sharded and
+        # e-sharded phases lowers to all-to-alls instead of all-reducing
+        # full (G, T, D) activations over the expert contraction.
+        if kind == "moe_gtd":  # (G, T, D) token groups
+            baxes = b if isinstance(b, tuple) else ((b,) if b else ())
+            return P(tuple(baxes) + (m,), None, None)
+        if kind == "moe_gecd":  # (G, E, C, D) expert-major
+            return P(b, m, None, None)
+        return None
+
+
+def set_policy(policy: Optional[ActivationPolicy]):
+    _STATE.policy = policy
+
+
+def get_policy() -> Optional[ActivationPolicy]:
+    return getattr(_STATE, "policy", None)
+
+
+@contextlib.contextmanager
+def activation_policy(policy: ActivationPolicy):
+    prev = get_policy()
+    set_policy(policy)
+    try:
+        yield
+    finally:
+        set_policy(prev)
+
+
+# kinds where GSPMD padding of a non-divisible dim is worth it (head
+# parallelism: 56 heads padded to 64 beats all-reducing S^2 logits); for the
+# rest a non-divisible dim is left unsharded (e.g. a single MoE group at
+# decode — padding would waste more than it shards).
+_PAD_OK = {"attn_q", "attn_kv"}
+
+
+def constrain(x, kind: str):
+    """Apply the active policy's constraint; no-op without a policy."""
+    pol = get_policy()
+    if pol is None:
+        return x
+    spec = pol.spec(kind, x.ndim)
+    if spec is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    if kind not in _PAD_OK:
+        sizes = dict(zip(pol.mesh.axis_names, pol.mesh.devices.shape))
+        parts = []
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                parts.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            prod = 1
+            for nm in names:
+                prod *= sizes.get(nm, 1)
+            parts.append(entry if x.shape[dim] % prod == 0 else None)
+        spec = PartitionSpec(*parts)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(pol.mesh, spec))

@@ -1,0 +1,220 @@
+"""Sharding rules: parameter, batch, and cache PartitionSpecs.
+
+Mesh axes:
+  single-pod: ("data", "model") = (16, 16)
+  multi-pod:  ("pod", "data", "model") = (pods, 16, 16)
+
+Logical placement:
+  batch  -> ("pod", "data")   pure DP across pods (gradient all-reduce is
+                              the only cross-pod collective; the pod axis
+                              crosses slower DCI links, so FSDP gathers and
+                              TP collectives are kept intra-pod by design)
+  fsdp   -> "data"            ZeRO-3 parameter/optimizer sharding
+  tensor -> "model"           megatron TP: heads / ffn / vocab
+  expert -> "model"           MoE expert parallelism (dispatch all-to-alls
+                              stay intra-pod)
+  cache sequence -> "model"   decode KV caches are sequence-sharded
+                              (context-parallel decode) — uniform across
+                              archs and immune to head-count divisibility
+
+Rules are matched on stringified pytree paths ("blocks/3/attn/wq"); the
+first matching pattern wins.  Unmatched leaves are replicated.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh):
+    """Axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def effective_batch_axes(mesh: Mesh, batch_size: int):
+    """Largest prefix of the DP axes whose product divides the batch.
+
+    Small serving batches (long_500k has global_batch=1) cannot shard over
+    all 32 DP shards; they replicate over the non-dividing axes."""
+    axes = []
+    prod = 1
+    for ax in batch_axes(mesh):
+        size = dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+        if batch_size % (prod * size) == 0:
+            axes.append(ax)
+            prod *= size
+    return tuple(axes)
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _divisible_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes do not divide (explicit
+    in_shardings require exact divisibility, unlike internal GSPMD ops)."""
+    sizes = _axis_sizes(mesh)
+    parts = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            parts.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for nm in names:
+            prod *= sizes.get(nm, 1)
+        parts.append(entry if shape[dim] % prod == 0 else None)
+    return P(*parts)
+
+
+# (pattern, spec-builder) — builders take (batch,) -> P; matched on
+# the path string *without* the stacked-repeats axis (it is always None).
+_PARAM_RULES: list[tuple[str, P]] = [
+    # embeddings / unembedding: vocab-sharded only.  FSDP on the d_model dim
+    # collides with the token gather's batch sharding (GSPMD falls back to
+    # "involuntary full rematerialization") — vocab sharding alone already
+    # divides the table 16x.
+    (r"embed/tok$", P("model", None)),
+    (r"embed/head$", P(None, "model")),
+    # attention
+    (r"(attn|cross)/w[qkv]$", P("data", "model")),
+    (r"(attn|cross)/b[qkv]$", P("model")),
+    (r"(attn|cross)/wo$", P("model", "data")),
+    (r"(attn|cross)/(q_norm|k_norm)/scale$", P()),
+    # dense mlp (incl. moe shared/dense residual)
+    (r"(mlp|shared|dense)/w[gi]$", P("data", "model")),
+    (r"(mlp|shared|dense)/wo$", P("model", "data")),
+    # moe experts: expert-parallel over "model", fsdp on d_model
+    (r"moe/router$", P("data", None)),
+    (r"moe/w[gi]$", P("model", "data", None)),
+    (r"moe/wo$", P("model", None, "data")),
+    # mamba
+    (r"mixer/in_proj$", P("data", "model")),
+    (r"mixer/conv_w$", P(None, "model")),
+    (r"mixer/conv_b$", P("model")),
+    (r"mixer/x_proj$", P("model", None)),
+    (r"mixer/dt_proj$", P(None, "model")),
+    (r"mixer/dt_bias$", P("model")),
+    (r"mixer/A_log$", P("model", None)),
+    (r"mixer/D$", P("model")),
+    (r"mixer/out_proj$", P("model", "data")),
+    # rwkv time mix
+    (r"mixer/w[rkvg]$", P("data", "model")),
+    (r"mixer/wo$", P("model", "data")),
+    (r"mixer/wa$", P("data", None)),
+    (r"mixer/wb$", P(None, "model")),
+    (r"mixer/u$", P("model", None)),
+    (r"mixer/(mu_[rkvwg]|w0)$", P()),
+    (r"mixer/ln_x/scale$", P()),
+    # rwkv channel mix
+    (r"ffn/wk$", P("data", "model")),
+    (r"ffn/wv$", P("model", "data")),
+    (r"ffn/wr$", P("data", "model")),
+    (r"ffn/mu_[rk]$", P()),
+    # norms
+    (r"(norm1|norm2|norm_cross|final_norm|ln_x)/(scale|bias)$", P()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(path_s: str, ndim: int, stacked: bool) -> P:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_s):
+            parts = tuple(spec)
+            if stacked:
+                parts = (None,) + parts
+            # pad to rank (trailing dims replicated)
+            parts = parts + (None,) * (ndim - len(parts))
+            assert len(parts) == ndim, f"{path_s}: spec {parts} vs rank {ndim}"
+            return P(*parts)
+    return P(*([None] * ndim))
+
+
+def param_specs(params: Any, mesh: Mesh | None = None) -> Any:
+    """PartitionSpec pytree matching the params pytree.
+
+    With a mesh, specs are validated for divisibility (e.g. qwen2-moe's 60
+    experts cannot shard over the 16-way model axis — the expert dim falls
+    back to replication and its d_model dim keeps FSDP)."""
+
+    def leaf_spec(path, leaf):
+        s = _path_str(path)
+        stacked = "blocks/" in s  # stacked-repeats leading axis
+        spec = _spec_for(s, leaf.ndim, stacked)
+        if mesh is not None:
+            spec = _divisible_spec(spec, leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_specs(mesh: Mesh, batch: Any) -> Any:
+    """Batch dict: leading dim is the global batch (divisibility-aware)."""
+
+    def leaf_spec(path, leaf):
+        b = effective_batch_axes(mesh, leaf.shape[0])
+        return P(b if b else None, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch)
+
+
+def cache_specs(mesh: Mesh, cache: Any) -> Any:
+    """Serving cache: one buffer per layer (see models.transformer.
+    stack_cache_init).
+
+    Attention K/V (B, S, nkv, hd): batch over DP axes, *sequence* over
+    "model" (context-parallel decode — uniform across archs and immune to
+    kv-head divisibility).  SSM states: batch over DP, feature dim over
+    "model".  kv_src (B, T, D): batch only.
+    """
+
+    def leaf_spec(path, leaf):
+        s = _path_str(path)
+        b = (
+            effective_batch_axes(mesh, leaf.shape[0]) or None
+            if leaf.ndim >= 1
+            else None
+        )
+        spec = None
+        if s == "kv_src":
+            spec = P(b, *([None] * (leaf.ndim - 1)))
+        elif re.search(r"/(k|v)$", s) and leaf.ndim == 4:
+            spec = P(b, "model", None, None)
+        elif re.search(r"/h$", s) and leaf.ndim == 3:  # mamba (B,d_in,ds)
+            spec = P(b, "model", None)
+        elif re.search(r"/conv$", s) and leaf.ndim == 3:  # (B,K-1,d_in)
+            spec = P(b, None, "model")
+        elif re.search(r"/s$", s) and leaf.ndim == 4:  # rwkv (B,nh,hd,hd)
+            spec = P(b, "model", None, None)
+        elif re.search(r"/x_prev_(att|ffn)$", s) and leaf.ndim == 2:
+            spec = P(b, None)
+        if spec is None:
+            return P(*([None] * leaf.ndim))
+        return _divisible_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,44 @@
+"""Graph substrate: structures, generators, partitioning, and reference problems.
+
+This package provides the host-side (numpy) graph preprocessing pipeline and
+the device-side (JAX) reference implementations of the five graph problems
+studied in the paper (BFS, PR, WCC, SSSP, SpMV).
+"""
+from repro.graph.structure import Graph, from_edges
+from repro.graph.generators import (
+    rmat,
+    uniform_random,
+    grid_road,
+    small_world,
+    paper_suite,
+    GraphSpec,
+    PAPER_GRAPHS,
+)
+from repro.graph.partition import (
+    horizontal_partition,
+    vertical_partition,
+    interval_shard_partition,
+    HorizontalPartitions,
+    VerticalPartitions,
+    IntervalShards,
+)
+from repro.graph import problems
+
+__all__ = [
+    "Graph",
+    "from_edges",
+    "rmat",
+    "uniform_random",
+    "grid_road",
+    "small_world",
+    "paper_suite",
+    "GraphSpec",
+    "PAPER_GRAPHS",
+    "horizontal_partition",
+    "vertical_partition",
+    "interval_shard_partition",
+    "HorizontalPartitions",
+    "VerticalPartitions",
+    "IntervalShards",
+    "problems",
+]

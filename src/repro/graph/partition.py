@@ -1,0 +1,172 @@
+"""Graph partitioning schemes used by the four accelerators (paper Sect. 3.1).
+
+- Horizontal: vertex set divided into equal intervals; partition i holds the
+  *outgoing* edges of interval i (HitGraph; AccuGraph uses the horizontally
+  partitioned in-CSR, i.e. intervals over destinations with their incoming
+  edges).
+- Vertical: intervals over destinations; partition j holds the *incoming*
+  edges of interval j (ThunderGP).
+- Interval-shard: both at once; shard (i, j) holds edges from interval i to
+  interval j (ForeGraph, following GridGraph).
+
+All partitioners are host-side numpy preprocessing, mirroring the paper's
+simulation environment where partitioned binaries are prepared offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.graph.structure import Graph
+
+
+def num_intervals(n: int, interval_size: int) -> int:
+    return max(1, math.ceil(n / interval_size))
+
+
+@dataclasses.dataclass(frozen=True)
+class HorizontalPartitions:
+    """Partitioned by *source* interval (HitGraph) or by *destination*
+    interval over the inverted graph (AccuGraph's in-CSR when by="dst")."""
+
+    graph: Graph
+    interval_size: int
+    by: str  # "src" or "dst"
+    k: int
+    # Per partition: edge index arrays into the graph's edge list, sorted.
+    edge_idx: list[np.ndarray]
+
+    def interval(self, p: int) -> tuple[int, int]:
+        lo = p * self.interval_size
+        return lo, min(self.graph.n, lo + self.interval_size)
+
+    def edges(self, p: int) -> tuple[np.ndarray, np.ndarray]:
+        idx = self.edge_idx[p]
+        return self.graph.src[idx], self.graph.dst[idx]
+
+    def csr_for(self, p: int) -> tuple[np.ndarray, np.ndarray]:
+        """Local CSR (by `by` endpoint) for partition p: (indptr, indices).
+
+        For by="dst" this is AccuGraph's in-CSR: indptr over the partition's
+        destination vertices, indices = source neighbors."""
+        lo, hi = self.interval(p)
+        idx = self.edge_idx[p]
+        own = self.graph.dst[idx] if self.by == "dst" else self.graph.src[idx]
+        other = self.graph.src[idx] if self.by == "dst" else self.graph.dst[idx]
+        order = np.argsort(own, kind="stable")
+        own, other = own[order], other[order]
+        indptr = np.zeros(hi - lo + 1, dtype=np.int64)
+        np.add.at(indptr, own - lo + 1, 1)
+        return np.cumsum(indptr), other.astype(np.int32)
+
+
+def horizontal_partition(g: Graph, interval_size: int, by: str = "src") -> HorizontalPartitions:
+    assert by in ("src", "dst")
+    k = num_intervals(g.n, interval_size)
+    key = (g.src if by == "src" else g.dst) // interval_size
+    order = np.argsort(key, kind="stable")
+    bounds = np.searchsorted(key[order], np.arange(k + 1))
+    edge_idx = [order[bounds[p] : bounds[p + 1]] for p in range(k)]
+    return HorizontalPartitions(g, interval_size, by, k, edge_idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class VerticalPartitions:
+    """Partitioned by *destination* interval; each partition further split
+    into p chunks by source range (ThunderGP: chunk per memory channel)."""
+
+    graph: Graph
+    interval_size: int
+    k: int
+    n_chunks: int
+    # edge_idx[partition][chunk] -> edge indices
+    edge_idx: list[list[np.ndarray]]
+
+    def interval(self, p: int) -> tuple[int, int]:
+        lo = p * self.interval_size
+        return lo, min(self.graph.n, lo + self.interval_size)
+
+    def edges(self, p: int, c: int) -> tuple[np.ndarray, np.ndarray]:
+        idx = self.edge_idx[p][c]
+        return self.graph.src[idx], self.graph.dst[idx]
+
+
+def vertical_partition(g: Graph, interval_size: int, n_chunks: int = 1) -> VerticalPartitions:
+    k = num_intervals(g.n, interval_size)
+    key = g.dst // interval_size
+    order = np.argsort(key, kind="stable")
+    bounds = np.searchsorted(key[order], np.arange(k + 1))
+    edge_idx: list[list[np.ndarray]] = []
+    chunk_size = math.ceil(g.n / n_chunks)
+    for p in range(k):
+        part = order[bounds[p] : bounds[p + 1]]
+        # ThunderGP sorts each partition's edges by source vertex so source
+        # value loads are semi-sequential.
+        part = part[np.argsort(g.src[part], kind="stable")]
+        ckey = g.src[part] // chunk_size
+        corder = np.argsort(ckey, kind="stable")
+        cbounds = np.searchsorted(ckey[corder], np.arange(n_chunks + 1))
+        edge_idx.append([part[corder[cbounds[c] : cbounds[c + 1]]] for c in range(n_chunks)])
+    return VerticalPartitions(g, interval_size, k, n_chunks, edge_idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntervalShards:
+    """GridGraph-style 2-level partitioning (ForeGraph).
+
+    shard_edges[i][j] holds edge indices from interval i to interval j.
+    ForeGraph stores each shard's edges with 16-bit *local* vertex ids
+    (interval size <= 65536), i.e. 4 bytes per edge.
+    """
+
+    graph: Graph
+    interval_size: int
+    q: int  # number of intervals
+    shard_edge_idx: list[list[np.ndarray]]
+
+    def interval(self, i: int) -> tuple[int, int]:
+        lo = i * self.interval_size
+        return lo, min(self.graph.n, lo + self.interval_size)
+
+    def shard(self, i: int, j: int) -> tuple[np.ndarray, np.ndarray]:
+        idx = self.shard_edge_idx[i][j]
+        return self.graph.src[idx], self.graph.dst[idx]
+
+    def shard_sizes(self) -> np.ndarray:
+        return np.array(
+            [[len(self.shard_edge_idx[i][j]) for j in range(self.q)] for i in range(self.q)],
+            dtype=np.int64,
+        )
+
+
+def interval_shard_partition(g: Graph, interval_size: int) -> IntervalShards:
+    assert interval_size <= 65536, "ForeGraph compressed edges need 16-bit local ids"
+    q = num_intervals(g.n, interval_size)
+    ikey = g.src // interval_size
+    jkey = g.dst // interval_size
+    key = ikey * q + jkey
+    order = np.argsort(key, kind="stable")
+    bounds = np.searchsorted(key[order], np.arange(q * q + 1))
+    shard_edge_idx = [
+        [order[bounds[i * q + j] : bounds[i * q + j + 1]] for j in range(q)] for i in range(q)
+    ]
+    return IntervalShards(g, interval_size, q, shard_edge_idx)
+
+
+def stride_mapping(n: int, q: int) -> np.ndarray:
+    """ForeGraph's stride mapping: rename vertices so each interval is the
+    set of vertices with a constant stride instead of consecutive ids.
+
+    Vertex v is renamed to its position in the sequence 0, q, 2q, ...,
+    1, q+1, ... — i.e. new_id(v) = (v % q) * ceil(n/q) + v // q  (clipped).
+    Balances high-degree vertices across intervals.
+    """
+    iv = math.ceil(n / q)
+    v = np.arange(n, dtype=np.int64)
+    new = (v % q) * iv + v // q
+    # Compact: some slots may exceed n-1 when n % q != 0; re-rank to a dense
+    # permutation preserving order.
+    rank = np.argsort(np.argsort(new))
+    return rank.astype(np.int32)

@@ -1,0 +1,167 @@
+"""Graph container used throughout the simulation environment.
+
+Host-side representation is numpy (graph construction and partitioning are a
+preprocessing step, exactly as in the paper's simulation environment where
+graphs are loaded from disk and laid out in simulated DRAM).  Device-side
+kernels receive plain arrays (CSR/CSC/edge-list views).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An immutable directed graph in COO form plus derived index structures.
+
+    Attributes:
+      n: number of vertices.
+      src, dst: int32 edge endpoint arrays, length m.
+      weights: optional float32 edge weights (SSSP/SpMV), length m.
+      name: identifier for reporting.
+      directed: whether the edge list is interpreted as directed.  Undirected
+        graphs are stored with both edge directions materialised (as the
+        accelerators in the paper do).
+    """
+
+    n: int
+    src: np.ndarray
+    dst: np.ndarray
+    weights: np.ndarray | None = None
+    name: str = "graph"
+    directed: bool = True
+
+    def __post_init__(self):
+        assert self.src.dtype == np.int32 and self.dst.dtype == np.int32
+        assert self.src.shape == self.dst.shape
+        if self.weights is not None:
+            assert self.weights.shape == self.src.shape
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def weighted(self) -> bool:
+        return self.weights is not None
+
+    @cached_property
+    def degrees_out(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.n).astype(np.int64)
+
+    @cached_property
+    def degrees_in(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.n).astype(np.int64)
+
+    @cached_property
+    def avg_degree(self) -> float:
+        return self.m / max(self.n, 1)
+
+    @cached_property
+    def degree_skewness(self) -> float:
+        """Pearson's moment coefficient of skewness of the degree distribution
+
+        (as used for Fig. 10 of the paper)."""
+        d = self.degrees_out.astype(np.float64)
+        mu = d.mean()
+        sigma = d.std()
+        if sigma == 0:
+            return 0.0
+        return float(np.mean(((d - mu) / sigma) ** 3))
+
+    # ---- derived index structures (cached, host-side) ----
+
+    @cached_property
+    def csr(self) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+        """(indptr, indices, weights) sorted by source vertex."""
+        order = np.argsort(self.src, kind="stable")
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.add.at(indptr, self.src + 1, 1)
+        indptr = np.cumsum(indptr).astype(np.int64)
+        w = self.weights[order] if self.weights is not None else None
+        return indptr, self.dst[order].astype(np.int32), w
+
+    @cached_property
+    def csc(self) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+        """(indptr, indices, weights) of the *inverted* graph (sorted by dst).
+
+        This is the in-CSR structure AccuGraph iterates over (pull flow)."""
+        order = np.argsort(self.dst, kind="stable")
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.add.at(indptr, self.dst + 1, 1)
+        indptr = np.cumsum(indptr).astype(np.int64)
+        w = self.weights[order] if self.weights is not None else None
+        return indptr, self.src[order].astype(np.int32), w
+
+    @cached_property
+    def edges_by_src(self) -> np.ndarray:
+        """Permutation sorting the edge list by (src) — stable."""
+        return np.argsort(self.src, kind="stable")
+
+    @cached_property
+    def edges_by_dst(self) -> np.ndarray:
+        """Permutation sorting the edge list by (dst) — stable."""
+        return np.argsort(self.dst, kind="stable")
+
+    def with_weights(self, rng: np.random.Generator | None = None) -> "Graph":
+        """Attach uniform-random integer weights in [1, 64) (paper: 32-bit)."""
+        if self.weights is not None:
+            return self
+        rng = rng or np.random.default_rng(7)
+        w = rng.integers(1, 64, size=self.m).astype(np.float32)
+        return dataclasses.replace(self, weights=w)
+
+    def renamed(self, perm: np.ndarray, name_suffix: str = "+map") -> "Graph":
+        """Apply a vertex renaming (used by ForeGraph stride mapping)."""
+        perm = perm.astype(np.int32)
+        return dataclasses.replace(
+            self,
+            src=perm[self.src],
+            dst=perm[self.dst],
+            name=self.name + name_suffix,
+        )
+
+
+def from_edges(
+    n: int,
+    edges: np.ndarray,
+    *,
+    directed: bool = True,
+    dedup: bool = True,
+    name: str = "graph",
+    weights: np.ndarray | None = None,
+) -> Graph:
+    """Build a Graph from an (m, 2) edge array.
+
+    Undirected inputs are symmetrised (both directions materialised).
+    Self-loops are removed; duplicate edges are removed when ``dedup``.
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.size == 0:
+        edges = edges.reshape(0, 2)
+    src, dst = edges[:, 0], edges[:, 1]
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if weights is not None:
+        weights = np.asarray(weights, dtype=np.float32)[keep]
+    if not directed:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        if weights is not None:
+            weights = np.concatenate([weights, weights])
+    if dedup:
+        key = src.astype(np.int64) * n + dst
+        _, idx = np.unique(key, return_index=True)
+        src, dst = src[idx], dst[idx]
+        if weights is not None:
+            weights = weights[idx]
+    return Graph(
+        n=n,
+        src=src.astype(np.int32),
+        dst=dst.astype(np.int32),
+        weights=weights,
+        name=name,
+        directed=directed,
+    )

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the performance-critical compute hot-spots.
+
+Each kernel directory contains:
+- ``<name>.py``: the pl.pallas_call kernel with explicit BlockSpec VMEM
+  tiling (TPU is the *target*; correctness is validated in interpret mode),
+- ``ops.py``: the jit'd public wrapper (dispatches interpret/compiled),
+- ``ref.py``: the pure-jnp oracle the tests assert against.
+
+Kernels:
+- ``dram_timing``: the DRAM bank state-machine engine, re-designed for TPU
+  as blocked request streaming (HBM->VMEM) with bank state in VMEM scratch
+  carried across sequential grid steps.
+- ``spmv``: ELL-blocked sparse matrix-vector multiply (the SpMV graph
+  workload, and the compute core of PR).
+- ``edge_update``: edge-centric gather-apply-scatter step (BFS/WCC/SSSP
+  min-propagation) over edge blocks.
+- ``attention``: blocked causal flash-attention forward (LM serving
+  hot-spot; the dry-run model code keeps XLA einsum attention so
+  cost_analysis stays interpretable — see DESIGN.md).
+"""

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blocked causal flash-attention forward (GQA).
+
+The LM serving/training hot-spot.  TPU adaptation: q/k/v tiles stream
+HBM->VMEM under an explicit BlockSpec grid; the kernel keeps the classic
+flash running-max/running-sum state in VMEM scratch across the sequential
+kv-block axis of the grid, so the S x S score matrix never materialises.
+
+Grid: (batch*q_heads, q_blocks, kv_blocks) with the kv axis innermost
+(sequential); block shapes are MXU-aligned (multiples of 128 on the lane
+dim, head_dim padded to 128 by the caller via ops.py).
+
+``ref.py`` is the pure-jnp oracle (same math as models/attention._sdpa);
+tests sweep shapes/dtypes in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_q, block_k, n_kv_blocks, causal, scale):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    q = q_ref[0, :, :]  # (block_q, d)
+    k = k_ref[0, :, :]  # (block_k, d)
+    v = v_ref[0, :, :]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (block_q, block_k)
+
+    if causal:
+        q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (block_q, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (block_q, block_k)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+
+    acc = acc_ref[...] * alpha
+    acc = acc + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, :, :] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "scale"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (BH, S, D) query, BH = batch * q_heads
+    k: jnp.ndarray,  # (BH, S, D) keys already expanded to q_heads (GQA: repeat)
+    v: jnp.ndarray,  # (BH, S, D)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    scale: float | None = None,  # 1/sqrt(true head_dim); D may be lane-padded
+) -> jnp.ndarray:
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, "pad seq to the block size"
+    n_q = s // block_q
+    n_k = s // block_k
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, n_kv_blocks=n_k,
+        causal=causal, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qb, kb: (b, qb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qb, kb: (b, kb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qb, kb: (b, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qb, kb: (b, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

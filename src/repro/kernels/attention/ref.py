@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive softmax attention
+with explicit (S, S) scores — the math the kernel must reproduce."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q, k, v: (BH, S, D).  Returns (BH, S, D) in q.dtype."""
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        logits = jnp.where(ki <= qi, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: DRAM bank state-machine timing engine.
+
+TPU adaptation of Ramulator's sequential bank state machines (see DESIGN.md
+§Hardware adaptation): the request trace is streamed from HBM in blocks
+(BlockSpec tiling) into VMEM; the per-bank state (open row, row-ready time,
+last data slot, last activate) lives in VMEM scratch that persists across
+the *sequential* TPU grid, so each grid step advances the same simulation.
+The per-request dependency chain is resolved with an in-kernel fori_loop
+over the VMEM-resident block (the block is the unit of HBM traffic; the
+serial chain never touches HBM).
+
+Timing semantics are identical to ``repro.core.engine._scan_engine``
+(`ref.py` re-exports it as the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+STATE_BANKS_PAD = 128  # lane-aligned bank-state vectors
+
+
+def _kernel(bank_ref, row_ref, out_ref, state_ref, scalars_ref, *, nbanks,
+            tCL, tRCD, tRP, tRC, tBL, lookahead, block, n_blocks):
+    """One grid step: consume `block` requests.
+
+    state_ref: (4, STATE_BANKS_PAD) int32 VMEM scratch
+       rows: 0=open_row, 1=row_ready, 2=last_data, 3=last_act
+    scalars_ref: (1, 8) int32 VMEM scratch
+       cols: 0=bus_free, 1=hits, 2=misses, 3=conflicts
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        state_ref[0, :] = jnp.full((STATE_BANKS_PAD,), -1, dtype=jnp.int32)
+        state_ref[1, :] = jnp.zeros((STATE_BANKS_PAD,), dtype=jnp.int32)
+        state_ref[2, :] = jnp.zeros((STATE_BANKS_PAD,), dtype=jnp.int32)
+        state_ref[3, :] = jnp.full((STATE_BANKS_PAD,), -(tRC + 1), dtype=jnp.int32)
+        scalars_ref[0, :] = jnp.zeros((8,), dtype=jnp.int32)
+
+    banks = bank_ref[0, :]
+    rows = row_ref[0, :]
+
+    def body(i, carry):
+        open_row, row_ready, last_data, last_act, bus_free, hits, misses, confs = carry
+        b = banks[i]
+        r = rows[i]
+        valid = b >= 0
+        bi = jnp.maximum(b, 0)
+        cur = open_row[bi]
+        is_hit = (cur == r) & valid
+        is_miss = (cur == jnp.int32(-1)) & valid
+        is_conf = valid & ~is_hit & ~is_miss
+
+        horizon = jnp.maximum(bus_free - lookahead, 0)
+        t_pre = jnp.maximum(last_data[bi], horizon)
+        t_act_conf = jnp.maximum(t_pre + tRP, last_act[bi] + tRC)
+        t_act_miss = jnp.maximum(jnp.maximum(last_act[bi] + tRC, last_data[bi]), horizon)
+        t_act = jnp.where(is_conf, t_act_conf, t_act_miss)
+        new_row_ready = jnp.where(is_hit, row_ready[bi], t_act + tRCD)
+
+        slot_start = jnp.maximum(new_row_ready, bus_free)
+        slot_end = slot_start + tBL
+        bus_free = jnp.where(valid, slot_end, bus_free)
+
+        open_row = jnp.where(valid, open_row.at[bi].set(r), open_row)
+        row_ready = jnp.where(valid, row_ready.at[bi].set(new_row_ready), row_ready)
+        last_data = jnp.where(valid, last_data.at[bi].set(slot_end), last_data)
+        last_act = jnp.where(is_hit | ~valid, last_act, last_act.at[bi].set(t_act))
+        return (open_row, row_ready, last_data, last_act, bus_free,
+                hits + is_hit, misses + is_miss, confs + is_conf)
+
+    carry = (
+        state_ref[0, :], state_ref[1, :], state_ref[2, :], state_ref[3, :],
+        scalars_ref[0, 0], scalars_ref[0, 1], scalars_ref[0, 2], scalars_ref[0, 3],
+    )
+    carry = jax.lax.fori_loop(0, block, body, carry)
+    state_ref[0, :], state_ref[1, :], state_ref[2, :], state_ref[3, :] = carry[:4]
+    scalars_ref[0, 0] = carry[4]
+    scalars_ref[0, 1] = carry[5]
+    scalars_ref[0, 2] = carry[6]
+    scalars_ref[0, 3] = carry[7]
+
+    @pl.when(step == n_blocks - 1)
+    def _finalize():
+        out = jnp.zeros((8,), dtype=jnp.int32)
+        out = out.at[0].set(scalars_ref[0, 0] + tCL)  # total cycles
+        out = out.at[1].set(scalars_ref[0, 1])
+        out = out.at[2].set(scalars_ref[0, 2])
+        out = out.at[3].set(scalars_ref[0, 3])
+        out_ref[0, :] = out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nbanks", "tCL", "tRCD", "tRP", "tRC", "tBL",
+                     "lookahead", "block", "interpret"),
+)
+def dram_timing_pallas(
+    bank: jnp.ndarray,
+    row: jnp.ndarray,
+    *,
+    nbanks: int,
+    tCL: int,
+    tRCD: int,
+    tRP: int,
+    tRC: int,
+    tBL: int,
+    lookahead: int,
+    block: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns int32[4]: (total_cycles, hits, misses, conflicts).
+
+    bank/row must be pre-padded to a multiple of `block` with bank == -1.
+    """
+    assert nbanks <= STATE_BANKS_PAD
+    n = bank.shape[0]
+    assert n % block == 0, "pad the trace to a multiple of the block size"
+    n_blocks = n // block
+    bank2 = bank.reshape(1, n)
+    row2 = row.reshape(1, n)
+    kernel = functools.partial(
+        _kernel, nbanks=nbanks, tCL=tCL, tRCD=tRCD, tRP=tRP, tRC=tRC,
+        tBL=tBL, lookahead=lookahead, block=block, n_blocks=n_blocks,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 8), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 8), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((4, STATE_BANKS_PAD), jnp.int32),
+            pltpu.VMEM((1, 8), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bank2, row2)
+    return out[0, :4]

@@ -1,0 +1,48 @@
+"""Public op: DRAM timing via the Pallas kernel (TPU) or scan oracle (CPU)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core.dram import DRAMConfig
+from repro.core.engine import decode
+from repro.core.trace import Trace
+from repro.kernels.dram_timing.dram_timing import dram_timing_pallas
+from repro.kernels.dram_timing.ref import dram_timing_ref
+
+
+def simulate_trace(
+    trace: Trace,
+    cfg: DRAMConfig,
+    *,
+    use_pallas: bool | None = None,
+    block: int = 512,
+    interpret: bool | None = None,
+) -> dict:
+    """Time a single-channel trace; returns cycles + row-buffer stats.
+
+    ``use_pallas=None`` auto-selects: the Pallas kernel on TPU backends,
+    the scan oracle elsewhere (interpret-mode Pallas is for tests)."""
+    if trace.n == 0:
+        return dict(cycles=0, hits=0, misses=0, conflicts=0)
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    bank, row = decode(trace.lines, cfg)
+    t = cfg.timing_cycles()
+    kw = dict(nbanks=cfg.nbanks, tCL=t["tCL"], tRCD=t["tRCD"], tRP=t["tRP"],
+              tRC=t["tRC"], tBL=t["tBL"], lookahead=16 * t["tBL"])
+    if use_pallas:
+        pad = (-len(bank)) % block
+        if pad:
+            bank = np.concatenate([bank, np.full(pad, -1, dtype=bank.dtype)])
+            row = np.concatenate([row, np.zeros(pad, dtype=row.dtype)])
+        out = dram_timing_pallas(
+            bank, row, block=block,
+            interpret=(not on_tpu) if interpret is None else interpret, **kw,
+        )
+    else:
+        out = dram_timing_ref(bank, row, **kw)
+    out = np.asarray(out)
+    return dict(cycles=int(out[0]), hits=int(out[1]), misses=int(out[2]),
+                conflicts=int(out[3]))

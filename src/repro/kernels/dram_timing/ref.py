@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the dram_timing Pallas kernel: the lax.scan engine
+from repro.core.engine (the simulation environment's ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine import _scan_engine
+
+
+def dram_timing_ref(bank, row, *, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
+    """Returns int32[4]: (total_cycles, hits, misses, conflicts)."""
+    cycles, hits, misses, conflicts = _scan_engine(
+        jnp.asarray(bank), jnp.asarray(row), nbanks, tCL, tRCD, tRP, tRC, tBL,
+        lookahead,
+    )
+    return jnp.stack([cycles, hits, misses, conflicts]).astype(jnp.int32)

@@ -1,0 +1,48 @@
+"""Public op: one min-propagation relaxation step over a Graph."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph
+from repro.kernels.edge_update.edge_update import edge_update_pallas
+from repro.kernels.edge_update.ref import edge_update_ref
+
+
+def relax_step(
+    g: Graph,
+    values: np.ndarray,
+    problem: str = "bfs",
+    *,
+    use_pallas: bool | None = None,
+    block: int = 1024,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """new_values = min(values, segment_min_dst(values[src] + delta))."""
+    if problem == "bfs":
+        delta = np.ones(g.m, dtype=np.float32)
+    elif problem == "wcc":
+        delta = np.zeros(g.m, dtype=np.float32)
+    elif problem == "sssp":
+        assert g.weights is not None
+        delta = g.weights
+    else:
+        raise ValueError(problem)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    v = jnp.asarray(values, dtype=jnp.float32)
+    if use_pallas or interpret:
+        pad = (-g.m) % block
+        src = np.concatenate([g.src, np.full(pad, -1, dtype=np.int32)])
+        dst = np.concatenate([g.dst, np.zeros(pad, dtype=np.int32)])
+        dl = np.concatenate([delta, np.zeros(pad, dtype=np.float32)])
+        on_tpu = jax.default_backend() == "tpu"
+        acc = edge_update_pallas(
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(dl), v,
+            block=block, interpret=(not on_tpu) if interpret is None else interpret,
+        )
+    else:
+        acc = edge_update_ref(jnp.asarray(g.src), jnp.asarray(g.dst),
+                              jnp.asarray(delta), v, g.n)
+    return np.asarray(jnp.minimum(v, acc))

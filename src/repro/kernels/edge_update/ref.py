@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for edge_update: segment-min over destinations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_update_ref(src, dst, delta, values, n: int) -> jnp.ndarray:
+    cand = jnp.take(values, jnp.maximum(src, 0)) + delta
+    cand = jnp.where(src >= 0, cand, jnp.inf)
+    return jax.ops.segment_min(cand, jnp.maximum(dst, 0), num_segments=n)

@@ -1,0 +1,36 @@
+"""Public SpMV op over Graph objects (used by the SpMV workload benches)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph
+from repro.kernels.spmv.ref import spmv_coo_ref, spmv_ell_ref, to_ell
+from repro.kernels.spmv.spmv import spmv_ell_pallas
+
+
+def spmv(
+    g: Graph,
+    x: np.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """y = A @ x with A[dst, src] = weight (1.0 if unweighted)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    x = jnp.asarray(x, dtype=jnp.float32)
+    if use_pallas or interpret:
+        idx, val = to_ell(g.src, g.dst, g.weights, g.n, block_rows=block_rows)
+        on_tpu = jax.default_backend() == "tpu"
+        y = spmv_ell_pallas(
+            jnp.asarray(idx), jnp.asarray(val), x,
+            block_rows=block_rows,
+            interpret=(not on_tpu) if interpret is None else interpret,
+        )
+        return np.asarray(y[: g.n])
+    w = g.weights if g.weights is not None else np.ones(g.m, dtype=np.float32)
+    return np.asarray(spmv_coo_ref(jnp.asarray(g.src), jnp.asarray(g.dst),
+                                   jnp.asarray(w), x, g.n))

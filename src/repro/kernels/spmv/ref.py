@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the spmv kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_ell_ref(idx: jnp.ndarray, w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """ELL SpMV: y[i] = sum_d w[i,d] * x[idx[i,d]] (idx == -1 is padding)."""
+    gathered = jnp.take(x, jnp.maximum(idx, 0), axis=0)
+    gathered = jnp.where(idx >= 0, gathered, 0.0)
+    return jnp.sum(gathered * w, axis=1)
+
+
+def spmv_coo_ref(src, dst, w, x, n: int) -> jnp.ndarray:
+    """COO SpMV via segment_sum: y[dst] += w * x[src]."""
+    return jax.ops.segment_sum(jnp.asarray(w) * jnp.take(x, src), dst, num_segments=n)
+
+
+def to_ell(src: np.ndarray, dst: np.ndarray, w: np.ndarray | None, n: int,
+           block_rows: int = 256) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR -> padded ELLPACK (row = dst, cols = srcs)."""
+    order = np.argsort(dst, kind="stable")
+    dsts, srcs = dst[order], src[order]
+    ws = w[order] if w is not None else np.ones(len(order), dtype=np.float32)
+    counts = np.bincount(dsts, minlength=n)
+    d = max(int(counts.max()) if len(counts) else 1, 1)
+    n_pad = -(-n // block_rows) * block_rows
+    idx = np.full((n_pad, d), -1, dtype=np.int32)
+    val = np.zeros((n_pad, d), dtype=np.float32)
+    pos = np.zeros(n, dtype=np.int64)
+    starts = np.zeros(n + 1, dtype=np.int64)
+    starts[1:] = np.cumsum(counts)
+    within = np.arange(len(dsts)) - starts[dsts]
+    idx[dsts, within] = srcs
+    val[dsts, within] = ws
+    del pos
+    return idx, val

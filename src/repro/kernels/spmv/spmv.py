@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: ELL-blocked sparse matrix-vector multiply.
+
+TPU adaptation of the graph workloads' compute core (SpMV is one of the
+paper's five problems; PR is SpMV + rank normalisation).  Instead of the
+FPGA's edge-streaming pipeline, we re-block for the TPU memory hierarchy:
+
+- The graph is preprocessed (host-side) to ELLPACK: per-vertex padded
+  neighbor/weight rows of width ``max_deg`` — a dense, MXU/VPU-friendly
+  layout (the FPGA equivalent of the paper's "interval fits in BRAM"
+  assumption becomes "x fits in VMEM").
+- Grid over row blocks: each step loads a (R, D) index/weight tile into
+  VMEM (BlockSpec), gathers x in VMEM and reduces along D.
+
+For vertex sets larger than VMEM the op falls back to the column-blocked
+variant in ops.py (interval-sharded, mirroring ForeGraph's scheme).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, w_ref, x_ref, out_ref):
+    idx = idx_ref[...]  # (R, D) int32, -1 = padding
+    w = w_ref[...]  # (R, D) f32
+    x = x_ref[...]  # (n,) f32 (whole vector in VMEM)
+    gathered = jnp.take(x, jnp.maximum(idx, 0), axis=0)  # (R, D)
+    gathered = jnp.where(idx >= 0, gathered, 0.0)
+    out_ref[...] = jnp.sum(gathered * w, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell_pallas(
+    idx: jnp.ndarray,  # (n_pad, D) int32 column indices, -1 padding
+    w: jnp.ndarray,  # (n_pad, D) f32 weights
+    x: jnp.ndarray,  # (n,) f32
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n_pad, d = idx.shape
+    assert n_pad % block_rows == 0, "pad rows to a multiple of block_rows"
+    grid = (n_pad // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),  # x resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(idx, w, x)

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- multi-pod dry-run: lower + compile every (arch x shape x mesh) cell ---
+#
+# This is the proof that the distribution config is coherent without real
+# hardware: for each assigned architecture and input shape, the train or
+# serve step is jit'd with the production shardings, lowered and compiled
+# against ShapeDtypeStruct stand-ins (no allocation), on both the single-pod
+# 16x16 mesh and the 2x16x16 multi-pod mesh.  memory_analysis() proves the
+# footprint fits; cost_analysis() + the partitioned HLO feed the roofline
+# table (EXPERIMENTS.md §Roofline).
+#
+# Usage:
+#   python -m repro.launch.dryrun --all [--mesh single|multi|both]
+#   python -m repro.launch.dryrun --arch qwen2_7b --shape train_4k --mesh multi
+#
+# Results are written incrementally to results/dryrun/<mesh>/<arch>__<shape>.json
+# so a long sweep can resume.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeSpec, get_arch, list_archs
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.roofline.analysis import HW, model_flops, roofline_terms
+from repro.roofline.hlo import analyze_hlo
+from repro.train import optimizer as opt
+from repro.train.train_step import TrainConfig, jit_train_step
+
+BIG_MODEL_PARAMS = 100e9  # above this, optimizer moments are kept in bf16
+
+
+def optimizer_config_for(cfg) -> opt.OptimizerConfig:
+    big = cfg.param_count() > BIG_MODEL_PARAMS
+    return opt.OptimizerConfig(
+        moment_dtype="bfloat16" if big else "float32", aggressive=big
+    )
+
+
+def input_specs(cfg, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sds = jax.ShapeDtypeStruct
+    b = shape.global_batch
+    if shape.kind == "decode":
+        specs = {"tokens": sds((b, 1), jnp.int32)}
+    else:
+        specs = {
+            "tokens": sds((b, shape.seq_len), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = sds((b, shape.seq_len), jnp.int32)
+    if cfg.n_enc_layers:
+        specs["enc_frames"] = sds((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.cross_attn_every:
+        specs["img_embeds"] = sds((b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def _mem_report(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            "peak_bytes": int(
+                getattr(ma, "peak_memory_in_bytes", 0)
+                or getattr(ma, "temp_size_in_bytes", 0)
+            ),
+        }
+    except Exception as e:  # pragma: no cover - backend specific
+        return {"error": str(e)}
+
+
+def _cost_report(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items() if np.isscalar(v)}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = cfg.shape_applicable(shape_name)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    params_abs = model.init_abstract()
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(optimizer=optimizer_config_for(cfg))
+        compile_for = jit_train_step(model, mesh, tcfg)
+        opt_abs = jax.eval_shape(lambda p: opt.init(tcfg.optimizer, p), params_abs)
+        jitted = compile_for(specs)
+        lowered = jitted.lower(params_abs, opt_abs, specs)
+        step_kind = "train_step"
+        tokens = shape.global_batch * shape.seq_len
+        flops_kind = "train"
+    elif shape.kind == "prefill":
+        from repro.serve.serve_step import jit_serve_steps
+
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        prefill, _, _ = jit_serve_steps(
+            model, mesh, shape.global_batch, shape.seq_len, batch_abstract=specs
+        )
+        lowered = prefill.lower(params_abs, specs, cache_abs)
+        step_kind = "prefill_step"
+        tokens = shape.global_batch * shape.seq_len
+        flops_kind = "inference"
+    else:  # decode
+        from repro.serve.serve_step import jit_serve_steps
+
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        _, decode, _ = jit_serve_steps(model, mesh, shape.global_batch, shape.seq_len)
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = decode.lower(params_abs, specs["tokens"], cache_abs, pos_abs)
+        step_kind = "serve_step"
+        tokens = shape.global_batch  # one new token per sequence
+        flops_kind = "inference"
+
+    lower_s = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t1
+
+    mem = _mem_report(compiled)
+    cost = _cost_report(compiled)
+    hlo = compiled.as_text()
+    # loop-aware per-device totals (cost_analysis counts while bodies once)
+    hstats = analyze_hlo(hlo)
+
+    chips = int(np.prod(mesh.devices.shape))
+    flops_dev = hstats["flops"]
+    bytes_dev = hstats["bytes"]
+    terms = roofline_terms(flops_dev, bytes_dev, hstats["collective_bytes"])
+    mflops = model_flops(cfg, tokens, flops_kind)
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips,
+        "status": "ok",
+        "step_kind": step_kind,
+        "lower_s": round(lower_s, 2),
+        "compile_s": round(compile_s, 2),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens_per_step": tokens,
+        "memory": mem,
+        "hlo_analysis": {
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "collective_bytes_per_device": hstats["collective_bytes"],
+            "collectives_by_op": hstats["collectives_by_op"],
+            "n_loops": hstats["n_loops"],
+        },
+        "xla_cost_analysis_unscaled": cost,
+        "roofline": terms,
+        "model_flops_total": mflops,
+        "model_flops_per_device": mflops / chips,
+        "useful_flops_ratio": (mflops / chips) / flops_dev if flops_dev else None,
+        "hlo_bytes": len(hlo),
+    }
+    return rec
+
+
+def cells(mesh_sel: str):
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[mesh_sel]
+    for arch in list_archs():
+        for shape in SHAPES:
+            for mp in meshes:
+                yield arch, shape, mp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = list(cells(args.mesh))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+        todo = [(args.arch, args.shape, mp) for mp in meshes]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    for arch, shape, mp in todo:
+        mesh_name = "multi" if mp else "single"
+        path = os.path.join(args.out, mesh_name, f"{arch}__{shape}.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        if os.path.exists(path) and not args.force:
+            print(f"[skip-existing] {arch} {shape} {mesh_name}")
+            continue
+        print(f"[lower+compile] {arch} {shape} {mesh_name} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, mp)
+        except Exception:
+            rec = {
+                "arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "error", "traceback": traceback.format_exc(),
+            }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_err += st == "error"
+        if st == "ok":
+            r = rec["roofline"]
+            print(
+                f"  ok in {rec['lower_s']}+{rec['compile_s']}s | "
+                f"mem temp {rec['memory'].get('temp_bytes', 0)/2**30:.2f} GiB | "
+                f"compute {r['compute_s']*1e3:.2f}ms mem {r['memory_s']*1e3:.2f}ms "
+                f"coll {r['collective_s']*1e3:.2f}ms -> {r['dominant']}-bound",
+                flush=True,
+            )
+        elif st == "skipped":
+            print(f"  skipped: {rec['reason']}")
+        else:
+            print("  ERROR:\n" + rec["traceback"].splitlines()[-1])
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

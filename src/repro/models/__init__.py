@@ -1,0 +1,10 @@
+"""Composable model definitions for the assigned architecture zoo.
+
+``Model`` (models/model.py) binds an ArchConfig to pure init/forward/loss/
+prefill/decode functions; families (dense GQA, MoE, Jamba hybrid, RWKV-6,
+whisper enc-dec, llama-vision) share one scanned-block implementation
+(models/transformer.py) parameterised by a per-layer program.
+"""
+from repro.models.model import Model, padded_vocab
+
+__all__ = ["Model", "padded_vocab"]

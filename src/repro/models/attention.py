@@ -1,0 +1,221 @@
+"""Grouped-query attention (train / prefill / decode) and cross-attention.
+
+The training path uses einsum attention so the dry-run's ``cost_analysis``
+stays interpretable (one dot per logical matmul); the TPU flash kernel in
+``repro/kernels/attention`` is the fused production hot-spot and is
+validated against ``ref.py`` == this module's math.
+
+Decode reads a pre-allocated KV cache of length ``max_seq`` and writes the
+new token's K/V at ``pos`` (``lax.dynamic_update_slice``), i.e. one
+``serve_step`` lowers one new token against a cache of seq_len, as the
+assigned decode shapes require.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rmsnorm, rmsnorm_params
+
+NEG_INF = -1e30
+
+
+def attn_params(key, cfg, dtype, cross: bool = False) -> dict:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, (d, nq * hd), dtype),
+        "wk": dense_init(kk, (d, nkv * hd), dtype),
+        "wv": dense_init(kv, (d, nkv * hd), dtype),
+        "wo": dense_init(ko, (nq * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype=dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype=dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype=dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_params(hd, dtype)
+        p["k_norm"] = rmsnorm_params(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions, rope: bool = True):
+    """x: (B, S, D) -> q (B, S, nq, hd), k/v (B, S, nkv, hd)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask: Optional[jnp.ndarray], constrain_heads: bool = False):
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, nq, hd); k, v: (B, Sk, nkv, hd); nq = nkv * group.
+    mask: broadcastable to (B, 1, Sq, Sk) additive, or None.
+    constrain_heads: pin kv-head TP sharding (train/prefill; decode caches
+    are sequence-sharded instead — see distributed/sharding.cache_specs).
+    """
+    from repro.distributed.context import constrain, get_policy
+
+    b, sq, nq, hd = q.shape
+    nkv = k.shape[2]
+    group = nq // nkv
+    qg = q.reshape(b, sq, nkv, group, hd)
+    if constrain_heads:
+        # Only pin head sharding where GSPMD otherwise all-reduces the
+        # S x S logits: q-head counts that neither divide the model axis
+        # nor fit under it (arctic 56H, qwen2 28H on 16).  For divisible or
+        # small head counts the propagated sharding is already optimal and
+        # forcing kv padding REGRESSES (measured 9x on llama-vision train).
+        pol = get_policy()
+        tp = pol.axis_size(pol.model) if pol is not None else 1
+        if pol is not None and nq % tp != 0 and nq > tp:
+            qg = constrain(qg, "attn_q")
+            k = constrain(k, "attn_kv")
+            v = constrain(v, "attn_kv")
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = logits + mask[:, :, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, nq * hd)
+
+
+def causal_mask(sq: int, sk: int, q_offset: int = 0) -> jnp.ndarray:
+    """(1, 1, sq, sk) additive causal mask; query i attends to keys <= i+off."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    return jnp.where(ki <= qi, 0.0, NEG_INF)[None, None, :, :].astype(jnp.float32)
+
+
+# Above this sequence length the S x S logits no longer fit and attention
+# switches to the query-chunked streaming form (the XLA analogue of flash
+# attention; the fused Pallas kernel in repro/kernels/attention is the
+# TPU production path, numerically validated against this math).
+BLOCKED_ATTN_THRESHOLD = 8192
+Q_CHUNK = 512
+
+
+def _blocked_sdpa(q, k, v, causal: bool, q_chunk: int = Q_CHUNK):
+    """Query-chunked attention: scan over query blocks, K/V resident.
+
+    Peak live logits are (B, heads, q_chunk, S) instead of (B, heads, S, S).
+    """
+    b, s, nq, hd = q.shape
+    nkv = k.shape[2]
+    group = nq // nkv
+    assert s % q_chunk == 0, "pad seq to a multiple of the query chunk"
+    nblocks = s // q_chunk
+    qb = jnp.moveaxis(q.reshape(b, nblocks, q_chunk, nq, hd), 1, 0)
+
+    def body(_, inp):
+        qi, i = inp
+        mask = None
+        if causal:
+            qpos = i * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = jnp.arange(s)[None, :]
+            mask = jnp.where(kpos <= qpos, 0.0, NEG_INF)[None, None].astype(jnp.float32)
+        out = _sdpa(qi, k, v, mask, constrain_heads=True)  # (B, q_chunk, H)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qb, jnp.arange(nblocks)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, nq * hd)
+
+
+def self_attention(params, cfg, x, positions=None, causal: bool = True):
+    """Full self-attention (train / prefill). x: (B, S, D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if s > BLOCKED_ATTN_THRESHOLD and s % Q_CHUNK == 0:
+        out = _blocked_sdpa(q, k, v, causal)
+    else:
+        mask = causal_mask(s, s) if causal else None
+        out = _sdpa(q, k, v, mask, constrain_heads=True)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"])
+
+
+def cross_attention(params, cfg, x, kv_src):
+    """Cross-attention: queries from x (B, S, D), keys/values from kv_src
+    (B, T, D) — whisper decoder / llama-vision image layers.  No RoPE on the
+    cross path (keys are modality embeddings)."""
+    b, s, _ = x.shape
+    t = kv_src.shape[1]
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("btd,dh->bth", kv_src, params["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+    v = jnp.einsum("btd,dh->bth", kv_src, params["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    out = _sdpa(q, k, v, None, constrain_heads=True)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    batch: int
+    max_seq: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: object
+
+
+def kv_cache_init(spec: KVCacheSpec) -> dict:
+    shape = (spec.batch, spec.max_seq, spec.n_kv_heads, spec.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype=spec.dtype),
+        "v": jnp.zeros(shape, dtype=spec.dtype),
+    }
+
+
+def decode_attention(params, cfg, x, cache: dict, pos: jnp.ndarray):
+    """One-token decode step.
+
+    x: (B, 1, D); cache k/v: (B, max_seq, nkv, hd); pos: scalar int32 —
+    the position being written (same for the whole batch; continuous
+    batching uses per-request position via the length mask).
+
+    Returns (out (B, 1, D), new_cache).
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None], (b, 1)) if pos.ndim == 0 else pos[:, None]
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos.reshape(()).astype(jnp.int32), 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos.reshape(()).astype(jnp.int32), 0, 0))
+    # mask out cache slots beyond pos
+    sk = k.shape[1]
+    valid = jnp.arange(sk)[None, :] <= pos.reshape(())
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :].astype(jnp.float32)
+    out = _sdpa(q, k.astype(x.dtype), v.astype(x.dtype), mask)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return out, {"k": k, "v": v}

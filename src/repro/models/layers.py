@@ -1,0 +1,152 @@
+"""Shared neural-net layers for the assigned LM architectures.
+
+Pure-functional: parameters are plain dict pytrees of jnp arrays; every
+layer is ``apply(params, x, ...)``.  Compute runs in the config dtype
+(bf16 on TPU) with float32 accumulation where it matters numerically
+(norms, softmax, router logits, losses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM pretraining setups)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.01).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_params(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = normed * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU — used by every assigned dense FFN)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, d: int, d_ff: int, dtype) -> dict:
+    kg, ki, ko = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(kg, (d, d_ff), dtype),
+        "wi": dense_init(ki, (d, d_ff), dtype),
+        "wo": dense_init(ko, (d_ff, d), dtype),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, params["wg"])
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    return jnp.einsum("...f,fd->...d", act, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_params(key, vocab: int, d: int, dtype, tie: bool) -> dict:
+    ke, kh = jax.random.split(key)
+    p = {"tok": embed_init(ke, (vocab, d), dtype)}
+    if not tie:
+        p["head"] = dense_init(kh, (d, vocab), dtype)
+    return p
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Returns logits in the compute dtype (vocab stays model-sharded).
+
+    Keeping logits in bf16 halves the dominant activation ("the logits
+    wall": batch x seq x vocab); the loss upcasts to f32 for the reduce."""
+    if "head" in params:
+        return jnp.einsum("...d,dv->...v", x, params["head"])
+    return jnp.einsum("...d,vd->...v", x, params["tok"])
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray | None = None):
+    """Mean token cross-entropy over model-sharded logits.
+
+    The gold logit is taken with take_along_axis (GSPMD partitions the
+    gather over the sharded vocab dim into a local masked gather + psum);
+    the logsumexp reduces over the sharded axis directly.  Both keep the
+    (B, S, V) tensor sharded — no dense one-hot is ever materialised."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

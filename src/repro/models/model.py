@@ -1,0 +1,205 @@
+"""Model-level API: init / forward / loss / prefill / decode for every
+assigned architecture, selected purely by its ArchConfig.
+
+All functions are pure; ``Model`` is a thin namespace bound to a config.
+Inputs are batch dicts:
+
+  train/prefill: {"tokens": (B,S) i32, "labels": (B,S) i32,
+                  ["enc_frames": (B,F,D)]  (whisper stub frontend),
+                  ["img_embeds": (B,I,D)]  (vlm stub frontend)}
+  decode:        tokens (B,1) i32 + cache + scalar position
+
+The modality frontends are STUBS per the assignment: ``input_specs``
+provides precomputed frame/patch embeddings at model width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import transformer as tf
+from repro.models.layers import (
+    dtype_of,
+    embed,
+    embedding_params,
+    rmsnorm,
+    rmsnorm_params,
+    softmax_xent,
+    unembed,
+)
+
+LB_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-3
+VOCAB_ALIGN = 256  # lcm(TP width, TPU lane) — vocab padded for sharding
+
+
+def padded_vocab(vocab: int) -> int:
+    return -(-vocab // VOCAB_ALIGN) * VOCAB_ALIGN
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: object  # ArchConfig
+
+    # ---- structure ----
+
+    @property
+    def dtype(self):
+        return dtype_of(self.cfg.dtype)
+
+    @property
+    def program(self) -> list[tf.LayerSpec]:
+        return tf.layer_program(self.cfg)
+
+    @property
+    def enc_program(self) -> list[tf.LayerSpec]:
+        return [tf.LayerSpec("attn_nc", "mlp")] * self.cfg.n_enc_layers
+
+    @property
+    def vocab_padded(self) -> int:
+        return padded_vocab(self.cfg.vocab)
+
+    def _stacked_blocks(self, key, program):
+        """Init per-position params stacked over repeats."""
+        period, repeats = tf.find_period(program)
+        keys = jax.random.split(key, period * repeats)
+        blocks = []
+        for pos in range(period):
+            per_rep = [
+                tf.block_params(keys[pos * repeats + r], self.cfg, program[pos], self.dtype)
+                for r in range(repeats)
+            ]
+            blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+        return blocks
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_blocks, k_enc = jax.random.split(key, 3)
+        params = {
+            "embed": embedding_params(
+                k_emb, self.vocab_padded, cfg.d_model, self.dtype, cfg.tie_embeddings
+            ),
+            "blocks": self._stacked_blocks(k_blocks, self.program),
+            "final_norm": rmsnorm_params(cfg.d_model, self.dtype),
+        }
+        if cfg.n_enc_layers:
+            params["enc"] = {
+                "blocks": self._stacked_blocks(k_enc, self.enc_program),
+                "final_norm": rmsnorm_params(cfg.d_model, self.dtype),
+            }
+        return params
+
+    def init_abstract(self) -> dict:
+        """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # ---- forward (train / prefill) ----
+
+    def _context(self, params, batch) -> dict:
+        ctx = {}
+        if self.cfg.n_enc_layers:
+            frames = batch["enc_frames"].astype(self.dtype)
+            enc_x, _ = tf.stack_forward(
+                params["enc"]["blocks"], self.cfg, self.enc_program, frames, {},
+                remat=self.cfg.remat,
+            )
+            ctx["kv_src"] = rmsnorm(params["enc"]["final_norm"], enc_x)
+        elif self.cfg.cross_attn_every:
+            ctx["kv_src"] = batch["img_embeds"].astype(self.dtype)
+        return ctx
+
+    def forward(self, params, batch) -> jnp.ndarray:
+        """Logits (B, S, vocab_padded) in the compute dtype (vocab sharded)."""
+        tokens = batch["tokens"]
+        x = constrain(embed(params["embed"], tokens).astype(self.dtype), "btd")
+        ctx = self._context(params, batch)
+        x, _aux = tf.stack_forward(
+            params["blocks"], self.cfg, self.program, x, ctx, remat=self.cfg.remat
+        )
+        x = rmsnorm(params["final_norm"], x)
+        logits = constrain(unembed(params["embed"], x), "logits")
+        return _mask_padded_vocab(logits, self.cfg.vocab)
+
+    def loss(self, params, batch):
+        """Mean next-token cross-entropy (+ MoE aux). Returns (loss, metrics)."""
+        tokens = batch["tokens"]
+        x = constrain(embed(params["embed"], tokens).astype(self.dtype), "btd")
+        ctx = self._context(params, batch)
+        x, aux = tf.stack_forward(
+            params["blocks"], self.cfg, self.program, x, ctx, remat=self.cfg.remat
+        )
+        x = rmsnorm(params["final_norm"], x)
+        logits = constrain(unembed(params["embed"], x), "logits")
+        logits = _mask_padded_vocab(logits, self.cfg.vocab)
+        ce = softmax_xent(logits, batch["labels"], batch.get("mask"))
+        loss = ce
+        if self.cfg.n_experts:
+            loss = loss + LB_LOSS_WEIGHT * aux["moe_lb_loss"] + Z_LOSS_WEIGHT * aux["moe_z_loss"]
+        metrics = {"ce": ce, **aux}
+        return loss, metrics
+
+    # ---- serving ----
+
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cache = {
+            "blocks": tf.stack_cache_init(
+                self.cfg, self.program, batch, max_seq, self.dtype
+            )
+        }
+        if self.cfg.n_enc_layers:
+            cache["kv_src"] = jnp.zeros(
+                (batch, self.cfg.n_frames, self.cfg.d_model), dtype=self.dtype
+            )
+        elif self.cfg.cross_attn_every:
+            cache["kv_src"] = jnp.zeros(
+                (batch, self.cfg.n_img_tokens, self.cfg.d_model), dtype=self.dtype
+            )
+        return cache
+
+    def prefill(self, params, batch, cache: dict):
+        """Run the full prompt, fill the cache, return (last_logits, cache).
+
+        Prompt K/V (and final SSM states) are produced by the full-sequence
+        forward and merged into the pre-allocated cache in one shot."""
+        tokens = batch["tokens"]
+        ctx = self._context(params, batch)
+        if "kv_src" in cache and "kv_src" in ctx:
+            cache = dict(cache, kv_src=ctx["kv_src"])
+        x = constrain(embed(params["embed"], tokens).astype(self.dtype), "btd")
+        x, new_blocks = tf.stack_prefill(
+            params["blocks"], self.cfg, self.program, x, cache["blocks"], ctx
+        )
+        cache = dict(cache, blocks=new_blocks)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x[:, -1:, :])
+        return _mask_padded_vocab(logits, self.cfg.vocab), cache
+
+    def decode_step(self, params, tokens, cache: dict, pos):
+        """One token for the whole batch.  tokens: (B, 1); pos: scalar i32."""
+        x = constrain(embed(params["embed"], tokens).astype(self.dtype), "btd")
+        ctx = {}
+        if "kv_src" in cache:
+            ctx["kv_src"] = cache["kv_src"]
+        x, new_blocks = tf.stack_decode(
+            params["blocks"], self.cfg, self.program, x, cache["blocks"],
+            jnp.asarray(pos, jnp.int32), ctx,
+        )
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)
+        return _mask_padded_vocab(logits, self.cfg.vocab), dict(cache, blocks=new_blocks)
+
+
+def _mask_padded_vocab(logits, vocab: int):
+    if logits.shape[-1] == vocab:
+        return logits
+    pad = logits.shape[-1] - vocab
+    neg = jnp.full((pad,), -1e30, dtype=logits.dtype)
+    bias = jnp.concatenate([jnp.zeros((vocab,), dtype=logits.dtype), neg])
+    return logits + bias
+
+

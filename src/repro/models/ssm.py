@@ -1,0 +1,309 @@
+"""State-space / linear-recurrent sequence mixers.
+
+Two mixers:
+
+- ``mamba``: the selective SSM block used by Jamba's non-attention layers
+  (data-dependent dt/B/C, diagonal A, depthwise causal conv).
+- ``rwkv6``: RWKV-6 "Finch" time-mix with data-dependent per-channel decay
+  (matrix-valued state per head) + the squared-ReLU channel-mix FFN.
+
+Both run training/prefill as a ``jax.lax.scan`` over time carrying the
+recurrent state — O(seq) compute and O(1) state, which is what makes the
+``long_500k`` decode shape runnable for the ssm/hybrid archs (full-attention
+archs skip it).  Decode is the single-step form of the same recurrence with
+the state held in the serving cache.
+
+Sequence scans keep the HLO compact (one While per layer stack) for the
+multi-pod dry-run; the roofline §Perf log discusses the chunked-parallel
+alternative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_params
+
+
+# ---------------------------------------------------------------------------
+# Mamba (Jamba's SSM layers)
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, -(-cfg.d_model // 16))
+    return d_in, dt_rank
+
+
+def mamba_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank = mamba_dims(cfg)
+    ds = cfg.ssm_d_state
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    return {
+        "in_proj": dense_init(k1, (d, 2 * d_in), dtype),
+        "conv_w": dense_init(k2, (cfg.ssm_d_conv, d_in), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_in,), dtype=dtype),
+        "x_proj": dense_init(k3, (d_in, dt_rank + 2 * ds), dtype),
+        "dt_proj": dense_init(k4, (dt_rank, d_in), dtype),
+        "dt_bias": jnp.zeros((d_in,), dtype=dtype),
+        "A_log": jnp.log(a),  # f32: recurrence runs in f32
+        "D": jnp.ones((d_in,), dtype=jnp.float32),
+        "out_proj": dense_init(k5, (d_in, d), dtype),
+    }
+
+
+def _mamba_conv_full(params, x):
+    """Causal depthwise conv over (B, S, d_in)."""
+    dconv = params["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (dconv - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, params["conv_w"][:, None, :].astype(x.dtype),  # (K, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + params["conv_b"]
+
+
+def _mamba_ssm_inputs(params, cfg, xc):
+    """Data-dependent dt, B, C from the conv output xc (B, S, d_in)."""
+    d_in, dt_rank = mamba_dims(cfg)
+    ds = cfg.ssm_d_state
+    proj = jnp.einsum("bsc,cr->bsr", xc, params["x_proj"])
+    dt_low, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jnp.einsum("bsr,rc->bsc", dt_low, params["dt_proj"]) + params["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B, S, d_in)
+    return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+
+
+def mamba(params, cfg, x, return_state: bool = False):
+    """Full-sequence mamba mixer. x: (B, S, D) -> (B, S, D) [, final state]."""
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_mamba_conv_full(params, xin).astype(jnp.float32)).astype(x.dtype)
+    dt, bmat, cmat = _mamba_ssm_inputs(params, cfg, xc)
+    a = -jnp.exp(params["A_log"])  # (d_in, ds)
+
+    xcf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        xc_t, dt_t, b_t, c_t = inp  # (B,d_in) (B,d_in) (B,ds) (B,ds)
+        da = jnp.exp(dt_t[:, :, None] * a[None, :, :])  # (B, d_in, ds)
+        db = dt_t[:, :, None] * b_t[:, None, :]  # (B, d_in, ds)
+        h = da * h + db * xc_t[:, :, None]
+        y = jnp.einsum("bcs,bs->bc", h, c_t)
+        return h, y
+
+    b, s, d_in = xc.shape
+    h0 = jnp.zeros((b, d_in, cfg.ssm_d_state), dtype=jnp.float32)
+    xs = (
+        jnp.moveaxis(xcf, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(bmat, 1, 0),
+        jnp.moveaxis(cmat, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xcf * params["D"]  # (B, S, d_in)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsc,cd->bsd", y, params["out_proj"])
+    if not return_state:
+        return out
+    # conv state: the last (K-1) pre-conv inputs
+    km1 = cfg.ssm_d_conv - 1
+    xin_f = xin.astype(jnp.float32)
+    if s >= km1:
+        conv_state = xin_f[:, s - km1 :, :]
+    else:
+        conv_state = jnp.pad(xin_f, ((0, 0), (km1 - s, 0), (0, 0)))
+    return out, {"h": h_final, "conv": conv_state}
+
+
+def mamba_state_init(cfg, batch: int) -> dict:
+    d_in, _ = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, d_in, cfg.ssm_d_state), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, d_in), dtype=jnp.float32),
+    }
+
+
+def mamba_decode(params, cfg, x, state):
+    """Single-token decode. x: (B, 1, D) -> (out (B, 1, D), new state)."""
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B, 1, d_in)
+    window = jnp.concatenate([state["conv"], xin.astype(jnp.float32)], axis=1)
+    conv_w = params["conv_w"].astype(jnp.float32)  # (K, d_in)
+    xc = jnp.einsum("bkc,kc->bc", window, conv_w) + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)[:, None, :].astype(x.dtype)  # (B, 1, d_in)
+    dt, bmat, cmat = _mamba_ssm_inputs(params, cfg, xc)
+    a = -jnp.exp(params["A_log"])
+    dt_t, b_t, c_t = dt[:, 0], bmat[:, 0], cmat[:, 0]
+    da = jnp.exp(dt_t[:, :, None] * a[None, :, :])
+    db = dt_t[:, :, None] * b_t[:, None, :]
+    h = da * state["h"] + db * xc[:, 0].astype(jnp.float32)[:, :, None]
+    y = jnp.einsum("bcs,bs->bc", h, c_t) + xc[:, 0].astype(jnp.float32) * params["D"]
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsc,cd->bsd", y, params["out_proj"])
+    return out, {"h": h, "conv": window[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+def rwkv_dims(cfg):
+    n_heads = cfg.d_model // cfg.rwkv_head_dim
+    return n_heads, cfg.rwkv_head_dim
+
+
+def rwkv_time_mix_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    nh, hd = rwkv_dims(cfg)
+    keys = jax.random.split(key, 8)
+    lora = 64  # decay LoRA rank (Finch: data-dependent decay)
+    return {
+        # token-shift interpolation weights per projection
+        "mu_r": jnp.full((d,), 0.5, dtype=jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, dtype=jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, dtype=jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, dtype=jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, dtype=jnp.float32),
+        "wr": dense_init(keys[0], (d, d), dtype),
+        "wk": dense_init(keys[1], (d, d), dtype),
+        "wv": dense_init(keys[2], (d, d), dtype),
+        "wg": dense_init(keys[3], (d, d), dtype),
+        "wo": dense_init(keys[4], (d, d), dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x Wa) Wb))
+        "w0": jnp.full((d,), -6.0, dtype=jnp.float32),
+        "wa": dense_init(keys[5], (d, lora), dtype),
+        "wb": dense_init(keys[6], (lora, d), dtype),
+        "u": (jax.random.normal(keys[7], (nh, hd), jnp.float32) * 0.1),  # bonus
+        "ln_x": rmsnorm_params(d, jnp.float32),  # per-head group norm approx
+    }
+
+
+def _rwkv_shift(x, x_prev):
+    """Token shift: prepend x_prev (B, D) to x (B, S, D) shifted by one."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rwkv_projections(params, x, x_shift):
+    def mix(mu):
+        m = mu.astype(jnp.float32)
+        return (x.astype(jnp.float32) * (1 - m) + x_shift.astype(jnp.float32) * m).astype(x.dtype)
+
+    r = jnp.einsum("bsd,de->bse", mix(params["mu_r"]), params["wr"])
+    k = jnp.einsum("bsd,de->bse", mix(params["mu_k"]), params["wk"])
+    v = jnp.einsum("bsd,de->bse", mix(params["mu_v"]), params["wv"])
+    g = jnp.einsum("bsd,de->bse", mix(params["mu_g"]), params["wg"])
+    xw = mix(params["mu_w"]).astype(jnp.float32)
+    dec = params["w0"] + jnp.tanh(xw @ params["wa"].astype(jnp.float32)) @ params["wb"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec))  # (B, S, D) in (0, 1): per-channel decay
+    return r, k, v, g, w
+
+
+def _rwkv_heads(t, nh, hd):
+    b, s, d = t.shape
+    return t.reshape(b, s, nh, hd)
+
+
+def rwkv_time_mix(params, cfg, x, x_prev=None, state0=None, return_state: bool = False):
+    """RWKV-6 time mix over a full sequence. x: (B, S, D)."""
+    b, s, d = x.shape
+    nh, hd = rwkv_dims(cfg)
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), dtype=x.dtype)
+    x_shift = _rwkv_shift(x, x_prev)
+    r, k, v, g, w = _rwkv_projections(params, x, x_shift)
+    rh = _rwkv_heads(r, nh, hd).astype(jnp.float32)
+    kh = _rwkv_heads(k, nh, hd).astype(jnp.float32)
+    vh = _rwkv_heads(v, nh, hd).astype(jnp.float32)
+    wh = _rwkv_heads(w.astype(jnp.float32), nh, hd)
+    u = params["u"]  # (nh, hd)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, nh, hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, nh, hd_k, hd_v)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    s0 = state0 if state0 is not None else jnp.zeros((b, nh, hd, hd), dtype=jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rh, kh, vh, wh))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)  # (B, S, D) f32
+    y = rmsnorm(params["ln_x"], y)
+    y = y.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["wo"])
+    if not return_state:
+        return out
+    return out, {"s": s_final, "x_prev": x[:, -1, :].astype(jnp.float32)}
+
+
+def rwkv_time_mix_decode(params, cfg, x, state):
+    """Single-token time mix.  state: {"s": (B,nh,hd,hd), "x_prev": (B,D)}."""
+    b, _, d = x.shape
+    nh, hd = rwkv_dims(cfg)
+    x_shift = state["x_prev"][:, None, :].astype(x.dtype)
+    r, k, v, g, w = _rwkv_projections(params, x, x_shift)
+    r_t = _rwkv_heads(r, nh, hd)[:, 0].astype(jnp.float32)
+    k_t = _rwkv_heads(k, nh, hd)[:, 0].astype(jnp.float32)
+    v_t = _rwkv_heads(v, nh, hd)[:, 0].astype(jnp.float32)
+    w_t = _rwkv_heads(w.astype(jnp.float32), nh, hd)[:, 0]
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r_t, state["s"] + params["u"][None, :, :, None] * kv)
+    new_s = w_t[..., :, None] * state["s"] + kv
+    y = y.reshape(b, 1, d)
+    y = rmsnorm(params["ln_x"], y)
+    y = y.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["wo"])
+    return out, {"s": new_s, "x_prev": x[:, 0, :]}
+
+
+def rwkv_channel_mix_params(key, cfg, dtype) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype=jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, dtype=jnp.float32),
+        "wk": dense_init(k1, (d, dff), dtype),
+        "wv": dense_init(k2, (dff, d), dtype),
+        "wr": dense_init(k3, (d, d), dtype),
+    }
+
+
+def rwkv_channel_mix(params, cfg, x, x_prev=None):
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), dtype=x.dtype)
+    x_shift = _rwkv_shift(x, x_prev)
+
+    def mix(mu):
+        m = mu.astype(jnp.float32)
+        return (x.astype(jnp.float32) * (1 - m) + x_shift.astype(jnp.float32) * m).astype(x.dtype)
+
+    k = jnp.einsum("bsd,df->bsf", mix(params["mu_k"]), params["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, params["wv"])
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", mix(params["mu_r"]), params["wr"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    return r * kv
+
+
+def rwkv_channel_mix_decode(params, cfg, x, x_prev):
+    out = rwkv_channel_mix(params, cfg, x, x_prev)
+    return out, x[:, 0, :]
+
+
+def rwkv_state_init(cfg, batch: int) -> dict:
+    nh, hd = rwkv_dims(cfg)
+    return {
+        "s": jnp.zeros((batch, nh, hd, hd), dtype=jnp.float32),
+        "x_prev_att": jnp.zeros((batch, cfg.d_model), dtype=jnp.float32),
+        "x_prev_ffn": jnp.zeros((batch, cfg.d_model), dtype=jnp.float32),
+    }

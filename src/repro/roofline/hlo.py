@@ -1,0 +1,408 @@
+"""Loop-aware analysis of post-partitioning HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every instruction ONCE — a
+``jax.lax.scan`` over 28 layers contributes the flops of a single layer.
+Since the whole framework leans on scanned layer stacks (and sequence scans
+for SSMs / blocked attention), that undercounts by the trip count.  This
+module re-derives the roofline inputs from ``compiled.as_text()`` with loop
+multiplicity:
+
+- the module is parsed into computations and a callgraph
+  (while/call/conditional/fusion edges),
+- while trip counts are recovered from the scan-style condition
+  (``compare(gte(param), constant(N)), direction=LT``),
+- FLOPs: 2 * prod(result dims) * prod(contracting dims) per ``dot``
+  (+ an analogous estimate per ``convolution``) — the MXU term;
+  elementwise vector-unit flops are deliberately excluded,
+- bytes: operand + result bytes of every *sequenced* instruction
+  (fusions count at their boundary — operands and outputs, i.e. the
+  HBM-traffic proxy; parameter/constant/tuple plumbing is excluded),
+- collective bytes: result-shape bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, times loop multiplicity.
+
+Validated against hand-countable programs in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops that are pure data plumbing at the sequenced level
+_NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "iota",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([a-z0-9-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\{\s*$")
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str  # operand list + attributes
+
+    def operand_names(self) -> list[str]:
+        # operands are inside the first balanced paren group of `rest`
+        depth, end = 1, len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        inside = self.rest[:end]
+        return re.findall(r"%[\w\.\-]+", inside)
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=(%?[\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def attr_list(self, key: str) -> list[int]:
+        m = re.search(rf"{key}=\{{([0-9, ]*)\}}", self.rest)
+        if not m or not m.group(1).strip():
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+
+    def symbols(self) -> dict[str, str]:
+        return {i.name: i.result_type for i in self.instrs}
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "{" in line:
+                name = m.group(1).lstrip("%")
+                cur = Computation(name, [])
+                if line.strip().startswith("ENTRY"):
+                    entry_name = name
+            continue
+        s = line.strip()
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            nm, tp, op, rest = mi.groups()
+            cur.instrs.append(Instr(nm.lstrip("%"), tp, op, rest))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover the scan trip count from the condition computation."""
+    const = None
+    direction = None
+    for i in cond.instrs:
+        if i.op == "constant" and i.result_type.startswith(("s32[]", "s64[]", "u32[]")):
+            m = re.search(r"constant\((-?\d+)\)", i.op + "(" + i.rest)
+            if m:
+                const = int(m.group(1))
+        if i.op == "compare":
+            m = re.search(r"direction=(\w+)", i.rest)
+            direction = m.group(1) if m else None
+    if const is None:
+        return 1
+    if direction in ("LT", "GT", None):
+        return max(const, 1)
+    if direction in ("LE", "GE"):
+        return max(const + 1, 1)
+    return max(const, 1)
+
+
+def _dot_flops(instr: Instr, symbols: dict[str, str]) -> float:
+    out_dims = []
+    for _, dims in _shape_dims(instr.result_type):
+        out_dims = dims
+        break
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    ops = instr.operand_names()
+    lhs_type = symbols.get(ops[0].lstrip("%"), "") if ops else ""
+    lhs_dims = _shape_dims(lhs_type)
+    lhs = lhs_dims[0][1] if lhs_dims else []
+    contract = instr.attr_list("lhs_contracting_dims")
+    k = 1
+    for c in contract:
+        if c < len(lhs):
+            k *= lhs[c]
+    return 2.0 * out_n * max(k, 1)
+
+
+def _conv_flops(instr: Instr, symbols: dict[str, str]) -> float:
+    out_n = 1
+    for _, dims in _shape_dims(instr.result_type):
+        for d in dims:
+            out_n *= d
+        break
+    ops = instr.operand_names()
+    rhs_type = symbols.get(ops[1].lstrip("%"), "") if len(ops) > 1 else ""
+    rhs_dims = _shape_dims(rhs_type)
+    rhs_n = 1
+    for d in (rhs_dims[0][1] if rhs_dims else []):
+        rhs_n *= d
+    # per output element: one MAC per kernel element per input-channel slice;
+    # approximate with prod(rhs)/out_features (exact for depthwise/dense 2d)
+    out_feat = (rhs_dims[0][1][-1] if rhs_dims and rhs_dims[0][1] else 1) or 1
+    m = re.search(r"feature_group_count=(\d+)", instr.rest)
+    groups = int(m.group(1)) if m else 1
+    return 2.0 * out_n * max(rhs_n // max(out_feat, 1), 1) / max(groups, 1) * groups / groups
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0  # op-level operands+results (upper bound)
+    result_bytes: float = 0.0  # sequenced results only (traffic proxy input)
+    param_bytes: float = 0.0  # parameters read (entry-level)
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    loops: list = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Stats", mult: float = 1.0, with_bytes: bool = True):
+        self.flops += other.flops * mult
+        if with_bytes:
+            self.bytes += other.bytes * mult
+            self.result_bytes += other.result_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0.0) + v * mult
+        self.loops.extend(other.loops)
+
+
+def _root_instr(comp: Computation) -> Optional[Instr]:
+    return comp.instrs[-1] if comp.instrs else None
+
+
+def _result_traffic(i: Instr, symbols: dict[str, str], comps: dict) -> float:
+    """Result bytes for the traffic proxy.  In-place buffer updates
+    (dynamic-update-slice / scatter, bare or as a fusion root) count the
+    update, not the whole aliased buffer."""
+    if i.op in ("dynamic-update-slice", "scatter"):
+        ops = i.operand_names()
+        if len(ops) > 1:
+            return shape_bytes(symbols.get(ops[1].lstrip("%"), ""))
+    if i.op == "fusion":
+        callee = i.attr("calls")
+        comp = comps.get(callee.lstrip("%")) if callee else None
+        root = _root_instr(comp) if comp else None
+        if root is not None and root.op == "dynamic-update-slice":
+            rops = root.operand_names()
+            csym = comp.symbols()
+            if len(rops) > 1:
+                return shape_bytes(csym.get(rops[1].lstrip("%"), ""))
+    return shape_bytes(i.result_type)
+
+
+def _analyze_comp(
+    comps: dict[str, Computation], name: str, memo: dict, depth: int = 0
+) -> Stats:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    st = Stats()
+    if comp is None or depth > 64:
+        memo[name] = st
+        return st
+    symbols = comp.symbols()
+    for i in comp.instrs:
+        # flops
+        if i.op == "dot":
+            st.flops += _dot_flops(i, symbols)
+        elif i.op == "convolution":
+            st.flops += _conv_flops(i, symbols)
+        # collectives
+        base = None
+        for c in COLLECTIVE_OPS:
+            if i.op == c or i.op == c + "-start":
+                base = c
+                break
+        if base is not None:
+            b = shape_bytes(i.result_type)
+            st.coll_bytes += b
+            st.coll_by_op[base] = st.coll_by_op.get(base, 0.0) + b
+        # bytes (sequenced-instruction traffic); parameters are handled at
+        # the entry level only (loop-body parameters are carried state)
+        if i.op not in _NO_BYTES and not i.op.endswith("-done"):
+            rb = _result_traffic(i, symbols, comps)
+            b = shape_bytes(i.result_type)
+            for opn in i.operand_names():
+                b += shape_bytes(symbols.get(opn.lstrip("%"), ""))
+            st.bytes += b
+            st.result_bytes += rb
+        # recursion
+        if i.op == "while":
+            body = i.attr("body")
+            cond = i.attr("condition")
+            # primary: XLA's own analysis on the instruction
+            m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', i.rest)
+            if m:
+                trip = int(m.group(1))
+            elif cond and cond.lstrip("%") in comps:
+                trip = _trip_count(comps[cond.lstrip("%")])
+            else:
+                trip = 1
+            if body:
+                sub = _analyze_comp(comps, body.lstrip("%"), memo, depth + 1)
+                st.add(sub, mult=trip)
+                st.loops.append({"body": body.lstrip("%"), "trip": trip})
+        elif i.op == "fusion":
+            callee = i.attr("calls")
+            if callee:
+                sub = _analyze_comp(comps, callee.lstrip("%"), memo, depth + 1)
+                # flops inside the fusion count; bytes counted at the boundary
+                st.add(sub, mult=1.0, with_bytes=False)
+        elif i.op == "call":
+            callee = i.attr("to_apply")
+            if callee:
+                st.add(_analyze_comp(comps, callee.lstrip("%"), memo, depth + 1))
+        elif i.op == "conditional":
+            for m in re.finditer(r"%[\w\.\-]+_computation[\w\.\-]*", i.rest):
+                cn = m.group(0).lstrip("%")
+                if cn in comps:
+                    st.add(_analyze_comp(comps, cn, memo, depth + 1))
+    memo[name] = st
+    return st
+
+
+def top_ops(text: str, k: int = 20, by: str = "traffic") -> list[dict]:
+    """Largest contributors with loop multiplicity — the §Perf profile.
+
+    by: "traffic" (result bytes), "collective", or "flops"."""
+    comps = parse_module(text)
+    mult: dict[str, float] = {"__entry__": 1.0}
+    # propagate multipliers breadth-first through while edges
+    entry = comps.get("__entry__")
+    frontier = [("__entry__", 1.0)]
+    seen = set()
+    while frontier:
+        name, m = frontier.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        for i in comps[name].instrs:
+            if i.op == "while":
+                body = i.attr("body")
+                mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', i.rest)
+                trip = int(mt.group(1)) if mt else 1
+                if body:
+                    mult[body.lstrip("%")] = m * trip
+                    frontier.append((body.lstrip("%"), m * trip))
+            elif i.op in ("call",):
+                callee = i.attr("to_apply")
+                if callee:
+                    mult[callee.lstrip("%")] = m
+                    frontier.append((callee.lstrip("%"), m))
+    rows = []
+    for name, m in mult.items():
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        symbols = comp.symbols()
+        for i in comp.instrs:
+            if i.op in _NO_BYTES or i.op.endswith("-done"):
+                continue
+            if by == "collective":
+                if not any(i.op.startswith(c) for c in COLLECTIVE_OPS):
+                    continue
+                val = shape_bytes(i.result_type) * m
+            elif by == "flops":
+                if i.op == "dot":
+                    val = _dot_flops(i, symbols) * m
+                elif i.op == "convolution":
+                    val = _conv_flops(i, symbols) * m
+                else:
+                    continue
+            else:
+                val = _result_traffic(i, symbols, comps) * m
+            if val > 0:
+                rows.append({"value": val, "op": i.op, "type": i.result_type[:80],
+                             "comp": name, "mult": m,
+                             "meta": i.rest[-120:] if "metadata" in i.rest else ""})
+    rows.sort(key=lambda r: -r["value"])
+    return rows[:k]
+
+
+def analyze_hlo(text: str) -> dict:
+    """Loop-aware per-device totals from post-partitioning HLO text.
+
+    Returns two byte measures:
+    - ``bytes_op_level``: operands+results of every sequenced instruction
+      (HloCostAnalysis convention; counts every def-use edge — upper bound),
+    - ``bytes``: the HBM-traffic proxy used for the roofline memory term:
+      entry parameters read once + each produced value written once and
+      read once (2 x result bytes).
+    """
+    comps = parse_module(text)
+    memo: dict[str, Stats] = {}
+    st = _analyze_comp(comps, "__entry__", memo)
+    entry_params = 0
+    if "__entry__" in comps:
+        for i in comps["__entry__"].instrs:
+            if i.op == "parameter":
+                entry_params += shape_bytes(i.result_type)
+    traffic = entry_params + 2.0 * st.result_bytes
+    return {
+        "flops": st.flops,
+        "bytes": traffic,
+        "bytes_op_level": st.bytes,
+        "entry_param_bytes": entry_params,
+        "collective_bytes": st.coll_bytes,
+        "collectives_by_op": {k: float(v) for k, v in st.coll_by_op.items()},
+        "n_loops": len(st.loops),
+        "loops": st.loops[:32],
+    }

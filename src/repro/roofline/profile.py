@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Dry-run profiler: re-lowers one (arch x shape x mesh) cell and prints the
+# top traffic / collective / flops contributors with loop multiplicity —
+# the "profile" of the hypothesis->change->measure loop (§Perf).
+#
+#   PYTHONPATH=src python -m repro.roofline.profile --arch qwen3_0_6b \
+#       --shape decode_32k [--mesh single] [--by traffic|collective|flops]
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--by", default="traffic",
+                    choices=["traffic", "collective", "flops"])
+    ap.add_argument("--top", type=int, default=18)
+    args = ap.parse_args()
+
+    from repro.configs.base import SHAPES, get_arch
+    from repro.launch.dryrun import input_specs, optimizer_config_for
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import Model
+    from repro.roofline.hlo import analyze_hlo, top_ops
+    from repro.train import optimizer as opt
+    from repro.train.train_step import TrainConfig, jit_train_step
+
+    cfg = get_arch(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    model = Model(cfg)
+    params_abs = model.init_abstract()
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(optimizer=optimizer_config_for(cfg))
+        opt_abs = jax.eval_shape(lambda p: opt.init(tcfg.optimizer, p), params_abs)
+        lowered = jit_train_step(model, mesh, tcfg)(specs).lower(
+            params_abs, opt_abs, specs)
+    elif shape.kind == "prefill":
+        from repro.serve.serve_step import jit_serve_steps
+
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        prefill, _, _ = jit_serve_steps(model, mesh, shape.global_batch,
+                                        shape.seq_len, batch_abstract=specs)
+        lowered = prefill.lower(params_abs, specs, cache_abs)
+    else:
+        from repro.serve.serve_step import jit_serve_steps
+
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        _, decode, _ = jit_serve_steps(model, mesh, shape.global_batch,
+                                       shape.seq_len)
+        lowered = decode.lower(params_abs, specs["tokens"], cache_abs,
+                               jax.ShapeDtypeStruct((), "int32"))
+
+    hlo = lowered.compile().as_text()
+    a = analyze_hlo(hlo)
+    print(f"flops/dev {a['flops']:.3e}  traffic/dev {a['bytes']/2**30:.2f} GiB  "
+          f"coll/dev {a['collective_bytes']/2**30:.2f} GiB  loops {a['n_loops']}")
+    print(f"collectives by op: "
+          f"{ {k: round(v/2**30,2) for k,v in a['collectives_by_op'].items()} } GiB")
+    unit = "GiB" if args.by != "flops" else "GFLOP"
+    div = 2**30 if args.by != "flops" else 1e9
+    print(f"\ntop {args.top} by {args.by}:")
+    for r in top_ops(hlo, k=args.top, by=args.by):
+        meta = ""
+        if r["meta"]:
+            import re as _re
+            m = _re.search(r'op_name="([^"]+)"', r["meta"])
+            meta = m.group(1)[-60:] if m else ""
+        print(f"  {r['value']/div:9.2f} {unit}  x{int(r['mult']):>5d} "
+              f"{r['op']:24s} {r['type'][:48]:48s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

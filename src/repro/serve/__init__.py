@@ -1,0 +1,1 @@
+"""Serving: KV/SSM cache management, prefill/decode steps, batched engine."""

@@ -1,0 +1,81 @@
+"""Jitted serving steps: prefill (prompt -> cache) and decode (one token).
+
+``serve_step`` (decode) lowers ONE new token against a cache of seq_len —
+this is what the assigned ``decode_32k`` / ``long_500k`` shapes measure.
+Caches are sequence-sharded over the "model" axis (context-parallel decode;
+see distributed/sharding.py) and batch-sharded over the DP axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model):
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode(params, tokens, cache, pos):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+
+    return decode
+
+
+def jit_serve_steps(model: Model, mesh, batch: int, max_seq: int,
+                    batch_abstract=None):
+    """jit prefill + decode with production shardings.
+
+    ``batch_abstract``: optional pytree (ShapeDtypeStructs or arrays) of the
+    prefill batch, used to pin its shardings; defaults to unspecified.
+    Returns (prefill_fn, decode_fn, cache_shardings)."""
+    from repro.distributed import sharding as shd
+    from repro.distributed.context import ActivationPolicy, activation_policy
+    from jax.sharding import PartitionSpec as P, NamedSharding
+
+    pspecs = shd.param_specs(model.init_abstract(), mesh)
+    p_sh = shd.shardings(mesh, pspecs)
+    cache_abs = jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+    c_sh = shd.shardings(mesh, shd.cache_specs(mesh, cache_abs))
+    b = shd.effective_batch_axes(mesh, batch) or None
+    tok_sh = NamedSharding(mesh, P(b, None))
+    pol = ActivationPolicy(mesh, b)
+
+    prefill_fn = make_prefill_step(model)
+    decode_fn = make_decode_step(model)
+
+    def prefill_pol(params, batch_, cache):
+        with activation_policy(pol):
+            return prefill_fn(params, batch_, cache)
+
+    def decode_pol(params, tokens, cache, pos):
+        with activation_policy(pol):
+            return decode_fn(params, tokens, cache, pos)
+
+    b_sh = (
+        shd.shardings(mesh, shd.batch_specs(mesh, batch_abstract))
+        if batch_abstract is not None
+        else None
+    )
+    prefill = jax.jit(
+        prefill_pol,
+        in_shardings=(p_sh, b_sh, c_sh),
+        out_shardings=(None, c_sh),
+    )
+    decode = jax.jit(
+        decode_pol,
+        in_shardings=(p_sh, tok_sh, c_sh, None),
+        out_shardings=(tok_sh, None, c_sh),
+        donate_argnums=(2,),
+    )
+    return prefill, decode, c_sh

@@ -1,0 +1,163 @@
+"""Checkpointing: atomic, async, sharded-friendly save/restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json     step, flat key list, dtypes/shapes, status
+            shard_p<i>.npz    this process's array shards (flat key -> array)
+
+Properties needed at cluster scale, implemented here for the single-process
+runtime and structured so a multi-host deployment maps 1:1:
+- *atomic*: written to step_<N>.tmp and renamed only after fsync — a job
+  killed mid-save never corrupts the latest checkpoint;
+- *async*: ``save_async`` snapshots device arrays to host, then writes on a
+  background thread — the train loop loses only the device->host copy time;
+- *restartable*: ``latest_step``/``restore`` pick the newest COMPLETE
+  checkpoint (partial saves are ignored / garbage-collected);
+- *elastic*: restore returns host numpy; the caller re-shards with
+  ``jax.device_put`` against whatever mesh the restarted job has (the
+  checkpoint stores global arrays, not device layouts — re-mesh-safe).
+- *bounded*: keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template: Any, flat: dict[str, np.ndarray]) -> Any:
+    paths_leaves = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            arr = arr.astype(want)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, process_index: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.process_index = process_index
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- write ----
+
+    def _write(self, step: int, flat: dict[str, np.ndarray], meta: dict):
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        # bfloat16 has no numpy dtype name savez understands natively via
+        # np.save; view as uint16 with dtype recorded in the manifest.
+        manifest = {"step": step, "keys": {}, "time": time.time()}
+        to_save = {}
+        for k, v in flat.items():
+            dt = str(v.dtype)
+            manifest["keys"][k] = {"dtype": dt, "shape": list(v.shape)}
+            if dt == "bfloat16":
+                v = v.view(np.uint16)
+            to_save[k.replace("/", "__")] = v
+        np.savez(os.path.join(tmp, f"shard_p{self.process_index}.npz"), **to_save)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+        # drop stale tmp dirs (crashed saves)
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+    def save(self, step: int, tree: Any, meta: dict | None = None):
+        flat = _flatten(tree)  # device->host copy happens here
+        self._write(step, flat, meta or {})
+
+    def save_async(self, step: int, tree: Any, meta: dict | None = None):
+        self.wait()
+        flat = _flatten(tree)  # snapshot synchronously (consistent view)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, flat, meta or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---- read ----
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    steps.append(int(name[5:]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> tuple[Any, int]:
+        """Returns (tree of host numpy matching `template`, step)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        import ml_dtypes
+
+        with np.load(os.path.join(d, f"shard_p{self.process_index}.npz")) as z:
+            for k, info in manifest["keys"].items():
+                arr = z[k.replace("/", "__")]
+                if info["dtype"] == "bfloat16":
+                    arr = arr.view(ml_dtypes.bfloat16)
+                flat[k] = arr
+        return _unflatten_like(template, flat), step
+
+    def restore_sharded(self, template: Any, mesh, specs, step=None):
+        """Restore and place onto a (possibly different) mesh — elastic
+        restart path: checkpoints are global arrays, so re-sharding is just
+        a device_put with the new mesh's shardings."""
+        from repro.distributed.sharding import shardings as mk_sh
+
+        host_tree, step = self.restore(template, step)
+        sh = mk_sh(mesh, specs)
+        return jax.device_put(host_tree, sh), step

@@ -1,0 +1,113 @@
+"""AdamW with memory-dtype-configurable moments, global-norm clipping and a
+warmup+cosine schedule.
+
+Built in-tree (no optax): the optimizer state is a pytree that mirrors the
+parameter sharding (ZeRO-3: each data-shard owns its slice of m/v), so the
+update is fully local — no optimizer collectives.
+
+``moment_dtype="bfloat16"`` halves optimizer memory (m and v in bf16 with
+f32 rounding on update) — this is what lets the ~0.5T-param arctic config
+fit the single-pod mesh (see DESIGN.md §Memory).  The first moment is the
+more compressible one; v is kept in f32 unless ``aggressive``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer memory
+    aggressive: bool = False  # also compress v (second moment)
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(cfg: OptimizerConfig, params: Any) -> dict:
+    mdt = dtype_of(cfg.moment_dtype)
+    vdt = mdt if cfg.aggressive else jnp.float32
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, vdt), params),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay on matrices only (no norms / biases / scalar mixes)."""
+    last = path[-1]
+    name = str(last.key) if hasattr(last, "key") else str(last)
+    return name not in ("scale", "bias", "dt_bias", "conv_b") and not name.startswith(
+        ("mu_", "b", "w0", "u", "D", "A_log")
+    )
+
+
+def update(cfg: OptimizerConfig, grads: Any, state: dict, params: Any):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_specs(params_specs: Any) -> dict:
+    """Optimizer-state PartitionSpecs mirror the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "step": P(),
+        "m": params_specs,
+        "v": params_specs,
+    }

@@ -1,0 +1,102 @@
+"""The jitted train step: loss -> grads -> AdamW update.
+
+Distribution is pure GSPMD: the step is written as single-program math and
+jit'd with in/out shardings from distributed/sharding.py.  The backward
+pass's gradient all-reduce over the batch axes runs in bf16 (the compute
+dtype) — 2x less DP traffic than f32 reductions, the framework's default
+gradient-compression setting.
+
+Optional gradient accumulation (``micro_steps``) scans over microbatches
+with a f32 grad accumulator, for global batches that exceed per-device
+activation memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt.OptimizerConfig = dataclasses.field(default_factory=opt.OptimizerConfig)
+    micro_steps: int = 1  # gradient accumulation factor
+
+
+def make_train_step(model: Model, tcfg: TrainConfig | None = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    tcfg = tcfg or TrainConfig()
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def single(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = opt.update(tcfg.optimizer, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    def accumulated(params, opt_state, batch):
+        ms = tcfg.micro_steps
+
+        def reshape(x):
+            return x.reshape((ms, x.shape[0] // ms) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / ms, acc, grads)
+            return (acc, loss_acc + loss / ms), None
+
+        (grads, loss), _ = jax.lax.scan(body, (zero, jnp.float32(0.0)), micro)
+        params, opt_state, opt_metrics = opt.update(tcfg.optimizer, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **opt_metrics}
+
+    return single if tcfg.micro_steps == 1 else accumulated
+
+
+def jit_train_step(model: Model, mesh, tcfg: TrainConfig | None = None,
+                   donate: bool = True):
+    """jit the train step with production shardings for `mesh`.
+
+    The activation policy (batch stays sharded over the DP axes through the
+    whole step) is installed around the traced body — see
+    distributed/context.py for why GSPMD needs the pin."""
+    from jax.sharding import NamedSharding
+    from repro.distributed import sharding as shd
+    from repro.distributed.context import ActivationPolicy, activation_policy
+
+    step = make_train_step(model, tcfg)
+    pol = ActivationPolicy(mesh, shd.batch_axes(mesh))  # train batches divide the DP axes
+
+    def step_with_policy(params, opt_state, batch):
+        with activation_policy(pol):
+            return step(params, opt_state, batch)
+
+    pspecs = shd.param_specs(model.init_abstract(), mesh)
+    sspecs = opt.state_specs(pspecs)
+    p_sh = shd.shardings(mesh, pspecs)
+    s_sh = shd.shardings(mesh, sspecs)
+
+    def batch_sharding(batch_abstract):
+        return shd.shardings(mesh, shd.batch_specs(mesh, batch_abstract))
+
+    def compile_for(batch_abstract):
+        in_sh = (p_sh, s_sh, batch_sharding(batch_abstract))
+        out_sh = (p_sh, s_sh, None)
+        return jax.jit(
+            step_with_policy,
+            in_shardings=in_sh,
+            out_shardings=out_sh,
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+    return compile_for

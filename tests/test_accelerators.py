@@ -1,0 +1,183 @@
+"""Accelerator models: semantic correctness against the reference solver,
+trace-volume formulas, optimization effects, and the paper's insights."""
+import numpy as np
+import pytest
+
+from repro.configs.graphsim import default_config
+from repro.core.accelerators import ACCELERATORS, run_accelerator
+from repro.core.accelerators.base import AccelConfig
+from repro.graph.problems import BFS, PR, SPMV, SSSP, WCC, reference_solve
+
+ALL_ACCELS = list(ACCELERATORS)
+
+
+def _close(a, b, **kw):
+    return np.allclose(
+        np.nan_to_num(a, posinf=1e18), np.nan_to_num(b, posinf=1e18), **kw
+    )
+
+
+@pytest.fixture(scope="module")
+def ref(small_rmat):
+    g = small_rmat
+    root = int(np.argmax(g.degrees_out))
+    out = {}
+    out["root"] = root
+    out["bfs"] = reference_solve(g, BFS, root=root)
+    out["wcc"] = reference_solve(g, WCC)
+    out["pr"] = reference_solve(g, PR)
+    return out
+
+
+@pytest.mark.parametrize("accel", ALL_ACCELS)
+@pytest.mark.parametrize("prob", ["bfs", "wcc", "pr"])
+def test_semantics_match_reference(accel, prob, small_rmat, ref):
+    problem = {"bfs": BFS, "wcc": WCC, "pr": PR}[prob]
+    rep = run_accelerator(accel, small_rmat, problem, root=ref["root"],
+                          config=default_config(accel))
+    expected = ref[prob][0]
+    assert _close(rep.values, expected, rtol=1e-4, atol=1e-7), f"{accel}/{prob}"
+    assert rep.timing.time_ns > 0
+    assert rep.mteps > 0
+
+
+@pytest.mark.parametrize("accel", ["hitgraph", "thundergp"])
+@pytest.mark.parametrize("prob", [SSSP, SPMV])
+def test_weighted_problems(accel, prob, small_rmat):
+    g = small_rmat.with_weights()
+    root = int(np.argmax(g.degrees_out))
+    expected, _ = reference_solve(g, prob, root=root)
+    rep = run_accelerator(accel, g, prob, root=root, config=default_config(accel))
+    assert _close(rep.values, expected, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("accel", ["accugraph", "foregraph"])
+def test_weighted_unsupported(accel, small_rmat):
+    with pytest.raises(ValueError):
+        run_accelerator(accel, small_rmat.with_weights(), SSSP,
+                        config=default_config(accel))
+
+
+def test_insight1_immediate_fewer_iterations(mid_rmat):
+    """Immediate update propagation (AccuGraph/ForeGraph) converges in at
+    most as many iterations as 2-phase (HitGraph/ThunderGP) — insight 1."""
+    g = mid_rmat
+    root = int(np.argmax(g.degrees_out))
+    # force multi-partition so Gauss-Seidel propagation can kick in
+    small = AccelConfig(interval_size=1024, optimizations=frozenset({"all"}))
+    fore = AccelConfig(interval_size=1024, n_pes=2, optimizations=frozenset({"all"}))
+    iters = {}
+    for accel, cfg in [("accugraph", small), ("foregraph", fore),
+                       ("hitgraph", small), ("thundergp", small)]:
+        iters[accel] = run_accelerator(accel, g, BFS, root=root, config=cfg).iterations
+    assert iters["accugraph"] <= iters["hitgraph"]
+    assert iters["foregraph"] <= iters["thundergp"]
+    assert (iters["accugraph"] < iters["hitgraph"]
+            or iters["foregraph"] < iters["thundergp"])
+
+
+def test_insight2_bytes_per_edge_ordering(mid_rmat):
+    """CSR (AccuGraph) and compressed edges (ForeGraph) read fewer bytes per
+    edge than the 8B edge lists of HitGraph/ThunderGP — insight 2."""
+    g = mid_rmat
+    root = int(np.argmax(g.degrees_out))
+    bpe = {
+        a: run_accelerator(a, g, PR, root=root, config=default_config(a)).bytes_per_edge
+        for a in ALL_ACCELS
+    }
+    assert bpe["accugraph"] < bpe["hitgraph"]
+    assert bpe["foregraph"] < bpe["thundergp"]
+
+
+def test_accugraph_partition_skipping_reduces_traffic(mid_rmat):
+    g = mid_rmat
+    root = int(np.argmax(g.degrees_out))
+    on = run_accelerator("accugraph", g, BFS, root=root,
+                         config=AccelConfig(interval_size=2048))
+    off = run_accelerator("accugraph", g, BFS, root=root,
+                          config=AccelConfig(interval_size=2048, optimizations=frozenset()))
+    assert on.timing.bytes_total <= off.timing.bytes_total
+    assert _close(on.values, off.values)
+
+
+def test_hitgraph_optimizations_monotone(mid_rmat):
+    """Each HitGraph optimization must not increase total traffic, and the
+    full set must strictly reduce it (Tab. 8 direction)."""
+    g = mid_rmat
+    root = int(np.argmax(g.degrees_out))
+    base = AccelConfig(interval_size=2048, optimizations=frozenset())
+    rep_none = run_accelerator("hitgraph", g, BFS, root=root, config=base)
+    for opt in [
+        {"partition_skipping"},
+        {"edge_sorting"},
+        {"edge_sorting", "update_combining"},
+        {"update_filtering"},
+    ]:
+        cfg = AccelConfig(interval_size=2048, optimizations=frozenset(opt))
+        rep = run_accelerator("hitgraph", g, BFS, root=root, config=cfg)
+        assert _close(rep.values, rep_none.values), opt
+        assert rep.timing.bytes_total <= rep_none.timing.bytes_total * 1.01, opt
+    rep_all = run_accelerator("hitgraph", g, BFS, root=root,
+                              config=AccelConfig(interval_size=2048))
+    assert rep_all.timing.bytes_total < rep_none.timing.bytes_total
+
+
+def test_foregraph_shuffling_alone_hurts(skewed_graph):
+    """Edge shuffling without stride mapping pads shards with null edges and
+    reads more (paper: 'This alone leads to reduced performance')."""
+    g = skewed_graph
+    root = int(np.argmax(g.degrees_out))
+    none = AccelConfig(interval_size=512, n_pes=4, optimizations=frozenset())
+    shuf = AccelConfig(interval_size=512, n_pes=4,
+                       optimizations=frozenset({"edge_shuffling"}))
+    r_none = run_accelerator("foregraph", g, BFS, root=root, config=none)
+    r_shuf = run_accelerator("foregraph", g, BFS, root=root, config=shuf)
+    assert r_shuf.edges_read_total >= r_none.edges_read_total
+    assert _close(r_none.values, r_shuf.values)
+
+
+def test_multichannel_scaling_hitgraph(mid_rmat):
+    """Insight: HitGraph scales near-linearly with channels (partition-to-
+    channel affinity), ThunderGP sub-linearly (apply writes to all copies)."""
+    g = mid_rmat
+    root = int(np.argmax(g.degrees_out))
+    t = {}
+    for ch in (1, 4):
+        cfg = AccelConfig(interval_size=1024, n_pes=ch)
+        t[("hit", ch)] = run_accelerator("hitgraph", g, BFS, root=root,
+                                         config=cfg, dram="thundergp").runtime_s
+        t[("tgp", ch)] = run_accelerator("thundergp", g, BFS, root=root,
+                                         config=cfg, dram="thundergp").runtime_s
+    hit_speedup = t[("hit", 1)] / t[("hit", 4)]
+    tgp_speedup = t[("tgp", 1)] / t[("tgp", 4)]
+    assert hit_speedup > 1.5
+    assert tgp_speedup > 1.0
+    assert hit_speedup > tgp_speedup  # insight 8
+
+
+def test_thundergp_memory_footprint_scales_with_channels(small_rmat):
+    """Insight 9: ThunderGP stores the full value set per channel."""
+    g = small_rmat
+    root = int(np.argmax(g.degrees_out))
+    r1 = run_accelerator("thundergp", g, BFS, root=root,
+                         config=AccelConfig(interval_size=1024, n_pes=1),
+                         dram="thundergp")
+    r4 = run_accelerator("thundergp", g, BFS, root=root,
+                         config=AccelConfig(interval_size=1024, n_pes=4),
+                         dram="thundergp")
+    # apply-phase value writes to every channel copy
+    w1 = sum(s.values_written for s in r1.per_iteration)
+    w4 = sum(s.values_written for s in r4.per_iteration)
+    assert w4 > 2 * w1
+
+
+def test_iteration_stats_consistency(small_rmat):
+    g = small_rmat
+    root = int(np.argmax(g.degrees_out))
+    for accel in ALL_ACCELS:
+        rep = run_accelerator(accel, g, BFS, root=root, config=default_config(accel))
+        assert len(rep.per_iteration) == rep.iterations
+        assert rep.edges_read_total > 0
+        # every iteration reads at most all edges (plus shuffling pad)
+        for s in rep.per_iteration:
+            assert s.edges_read <= g.m * 4

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture is instantiated at its REDUCED same-family
+config (small width/depth/experts/tables) and runs one forward + one train
+step on CPU, asserting output shapes and absence of NaNs.  The FULL configs
+are exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.models import Model
+from repro.train import optimizer as opt
+from repro.train.train_step import TrainConfig, make_train_step
+
+B, S = 2, 16
+
+
+def tiny_batch(cfg, rng_seed=0, seq=S):
+    rng = np.random.default_rng(rng_seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, seq)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, seq)), jnp.int32),
+    }
+    if cfg.n_enc_layers:
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frames, cfg.d_model)) * 0.05, jnp.float32
+        )
+    if cfg.cross_attn_every:
+        batch["img_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_img_tokens, cfg.d_model)) * 0.05, jnp.float32
+        )
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_arch(request.param).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return request.param, cfg, model, params
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    arch_id, cfg, model, params = arch_setup
+    batch = tiny_batch(cfg)
+    logits = jax.jit(model.forward)(params, batch)
+    assert logits.shape[:2] == (B, S)
+    assert logits.shape[2] >= cfg.vocab
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab])))
+
+
+def test_train_step_reduces_loss_and_stays_finite(arch_setup):
+    arch_id, cfg, model, params = arch_setup
+    tcfg = TrainConfig(optimizer=opt.OptimizerConfig(lr=1e-3, warmup_steps=0,
+                                                     total_steps=10))
+    step = jax.jit(make_train_step(model, tcfg))
+    state = opt.init(tcfg.optimizer, params)
+    batch = tiny_batch(cfg)
+    losses = []
+    for _ in range(3):
+        params, state, metrics = step(params, state, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(l) for l in losses), losses
+    # same batch repeated: optimization must make progress
+    assert losses[-1] < losses[0], losses
+    assert bool(jnp.all(jnp.isfinite(jax.tree.leaves(params)[0])))
+
+
+def test_decode_matches_forward(arch_setup):
+    """Prefill + one decode step == forward on the extended sequence.
+
+    Exact for non-MoE archs; MoE archs use capacity-based token dropping
+    whose drops depend on group composition, so only finiteness + shape is
+    asserted there (the dropless equivalence is tested in test_moe.py)."""
+    arch_id, cfg, model, params = arch_setup
+    rng = np.random.default_rng(1)
+    batch = tiny_batch(cfg, rng_seed=1, seq=S)
+    toks = batch["tokens"]
+    cache = model.init_cache(B, S + 4)
+    logits_pre, cache = jax.jit(model.prefill)(params, batch, cache)
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+    logits_dec, cache = jax.jit(model.decode_step)(params, nxt, cache, jnp.int32(S))
+    assert logits_dec.shape[0] == B
+    assert bool(jnp.all(jnp.isfinite(logits_dec[..., : cfg.vocab])))
+    if cfg.n_experts:
+        return
+    full = dict(batch, tokens=jnp.concatenate([toks, nxt], axis=1))
+    if "labels" in full:
+        del full["labels"]
+    logits_full = jax.jit(model.forward)(params, full)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0, : cfg.vocab], np.float32),
+        np.asarray(logits_full[:, -1, : cfg.vocab], np.float32),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_param_count_matches_abstract(arch_setup):
+    """init_abstract structure matches a real init; param_count is sane."""
+    arch_id, cfg, model, params = arch_setup
+    abs_params = model.init_abstract()
+    real_tree = jax.tree.structure(params)
+    abs_tree = jax.tree.structure(abs_params)
+    assert real_tree == abs_tree
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(abs_params)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_registered(arch_id):
+    cfg = get_arch(arch_id)
+    assert cfg.n_layers >= 12
+    assert cfg.vocab >= 32_000
+    # the four assigned shape applicabilities are decidable
+    from repro.configs.base import SHAPES
+
+    for s in SHAPES:
+        ok, why = cfg.shape_applicable(s)
+        assert ok or why

@@ -1,0 +1,149 @@
+"""Graph substrate tests: structures, generators, partitioning invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (
+    from_edges,
+    horizontal_partition,
+    interval_shard_partition,
+    vertical_partition,
+)
+from repro.graph.generators import PAPER_GRAPHS, grid_road, rmat
+from repro.graph.partition import stride_mapping
+
+
+def test_from_edges_dedup_and_selfloops():
+    edges = np.array([[0, 1], [0, 1], [1, 1], [1, 2]])
+    g = from_edges(4, edges)
+    assert g.m == 2  # dup removed, self-loop removed
+    assert set(zip(g.src.tolist(), g.dst.tolist())) == {(0, 1), (1, 2)}
+
+
+def test_from_edges_undirected_symmetrises():
+    g = from_edges(3, np.array([[0, 1]]), directed=False)
+    assert set(zip(g.src.tolist(), g.dst.tolist())) == {(0, 1), (1, 0)}
+
+
+def test_csr_csc_roundtrip(small_rmat):
+    g = small_rmat
+    indptr, indices, _ = g.csr
+    assert indptr[-1] == g.m
+    # CSR rebuild == edge set
+    rebuilt = set()
+    for v in range(g.n):
+        for e in range(indptr[v], indptr[v + 1]):
+            rebuilt.add((v, int(indices[e])))
+    assert rebuilt == set(zip(g.src.tolist(), g.dst.tolist()))
+    cptr, cidx, _ = g.csc
+    assert cptr[-1] == g.m
+
+
+def test_rmat_properties():
+    g = rmat(10, edge_factor=8, seed=1)
+    assert g.n == 1024
+    assert 0 < g.m <= 8 * 1024
+    assert g.degree_skewness > 1.0  # power-law-ish
+
+
+def test_road_graph_properties():
+    g = grid_road(32)
+    assert abs(g.degree_skewness) < 1.5  # near-regular degrees
+    assert g.avg_degree < 6
+
+
+@pytest.mark.parametrize("name", ["sd", "db", "yt"])
+def test_paper_suite_builds(name):
+    g = PAPER_GRAPHS[name].build()
+    assert g.n > 0 and g.m > 0
+    root = PAPER_GRAPHS[name].root
+    assert 0 <= root < g.n
+
+
+@given(
+    n=st.integers(8, 200),
+    m=st.integers(1, 400),
+    interval=st.integers(4, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_horizontal_partition_covers_all_edges(n, m, interval, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    parts = horizontal_partition(g, interval, by="src")
+    seen = np.concatenate([parts.edge_idx[p] for p in range(parts.k)]) if parts.k else []
+    assert sorted(seen) == list(range(g.m))  # every edge exactly once
+    for p in range(parts.k):
+        lo, hi = parts.interval(p)
+        s, _ = parts.edges(p)
+        assert ((s >= lo) & (s < hi)).all()
+
+
+@given(
+    n=st.integers(8, 200),
+    m=st.integers(1, 400),
+    interval=st.integers(4, 64),
+    chunks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_vertical_partition_covers_all_edges(n, m, interval, chunks, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    parts = vertical_partition(g, interval, n_chunks=chunks)
+    seen = np.concatenate(
+        [parts.edge_idx[p][c] for p in range(parts.k) for c in range(chunks)]
+    )
+    assert sorted(seen.tolist()) == list(range(g.m))
+    for p in range(parts.k):
+        lo, hi = parts.interval(p)
+        for c in range(chunks):
+            _, d = parts.edges(p, c)
+            assert ((d >= lo) & (d < hi)).all()
+            # ThunderGP chunks are sorted by source
+            s, _ = parts.edges(p, c)
+            assert (np.diff(s) >= 0).all()
+
+
+@given(
+    n=st.integers(8, 300),
+    m=st.integers(1, 500),
+    interval=st.integers(4, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_interval_shard_covers_all_edges(n, m, interval, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    sh = interval_shard_partition(g, interval)
+    seen = np.concatenate(
+        [sh.shard_edge_idx[i][j] for i in range(sh.q) for j in range(sh.q)]
+    )
+    assert sorted(seen.tolist()) == list(range(g.m))
+    for i in range(sh.q):
+        for j in range(sh.q):
+            s, d = sh.shard(i, j)
+            assert ((s // interval) == i).all()
+            assert ((d // interval) == j).all()
+
+
+@given(n=st.integers(2, 1000), q=st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_stride_mapping_is_permutation(n, q):
+    perm = stride_mapping(n, q)
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+def test_stride_mapping_balances_skew(skewed_graph):
+    g = skewed_graph
+    interval = 512
+    q = -(-g.n // interval)
+    sizes_before = interval_shard_partition(g, interval).shard_sizes()
+    g2 = g.renamed(stride_mapping(g.n, q))
+    sizes_after = interval_shard_partition(g2, interval).shard_sizes()
+    # stride mapping reduces the max/mean shard-size imbalance
+    def imbalance(s):
+        nz = s[s > 0]
+        return nz.max() / max(nz.mean(), 1)
+
+    assert imbalance(sizes_after) <= imbalance(sizes_before) * 1.05

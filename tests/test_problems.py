@@ -1,0 +1,84 @@
+"""Reference problem solvers vs plain-python oracles."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import from_edges
+from repro.graph.problems import BFS, PR, SPMV, SSSP, WCC, reference_solve
+from tests.conftest import bfs_oracle, wcc_oracle
+
+
+def test_bfs_matches_oracle(small_rmat):
+    g = small_rmat
+    root = int(np.argmax(g.degrees_out))
+    vals, iters = reference_solve(g, BFS, root=root)
+    oracle = bfs_oracle(g.n, g.src, g.dst, root)
+    np.testing.assert_array_equal(vals, oracle)
+    assert iters >= 1
+
+
+def test_wcc_matches_union_find(small_rmat):
+    g = small_rmat
+    vals, _ = reference_solve(g, WCC)
+    gs = WCC.prepare_graph(g)
+    oracle = wcc_oracle(gs.n, gs.src, gs.dst)
+    np.testing.assert_array_equal(vals, oracle)
+
+
+def test_pr_sums_to_one(small_rmat):
+    # one PR iteration preserves sum only approximately (dangling mass);
+    # check the update formula directly against dense numpy.
+    g = small_rmat
+    vals, iters = reference_solve(g, PR)
+    assert iters == 1
+    x = np.full(g.n, 1.0 / g.n, dtype=np.float32)
+    contrib = np.zeros(g.n, dtype=np.float32)
+    deg = np.maximum(g.degrees_out, 1)
+    np.add.at(contrib, g.dst, (x[g.src] / deg[g.src]).astype(np.float32))
+    expected = (1 - 0.85) / g.n + 0.85 * contrib
+    np.testing.assert_allclose(vals, expected, rtol=1e-5, atol=1e-8)
+
+
+def test_sssp_matches_bellman_ford(small_rmat):
+    g = small_rmat.with_weights()
+    root = int(np.argmax(g.degrees_out))
+    vals, _ = reference_solve(g, SSSP, root=root)
+    # numpy Bellman-Ford
+    dist = np.full(g.n, np.inf, dtype=np.float64)
+    dist[root] = 0
+    for _ in range(g.n):
+        nd = dist.copy()
+        np.minimum.at(nd, g.dst, dist[g.src] + g.weights)
+        if np.array_equal(nd, dist):
+            break
+        dist = nd
+    np.testing.assert_allclose(
+        np.nan_to_num(vals, posinf=1e18), np.nan_to_num(dist, posinf=1e18), rtol=1e-5
+    )
+
+
+def test_spmv_matches_dense(small_rmat):
+    g = small_rmat.with_weights()
+    vals, iters = reference_solve(g, SPMV)
+    assert iters == 1
+    x = SPMV.init_values(g)
+    a = np.zeros((g.n, g.n), dtype=np.float64)
+    a[g.dst, g.src] += g.weights  # y[dst] += w * x[src]
+    expected = a @ x
+    np.testing.assert_allclose(vals, expected, rtol=1e-4, atol=1e-6)
+
+
+@given(
+    n=st.integers(4, 60),
+    m=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_bfs_property_random_graphs(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    if g.m == 0:
+        return
+    root = int(g.src[0])
+    vals, _ = reference_solve(g, BFS, root=root)
+    oracle = bfs_oracle(g.n, g.src, g.dst, root)
+    np.testing.assert_array_equal(vals, oracle)

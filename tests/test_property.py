@@ -1,0 +1,253 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dram import dram_config
+from repro.core.engine import classify_fast, decode, simulate_channel_scan
+from repro.core.trace import (
+    Trace,
+    coalesce,
+    concat,
+    proportional_interleave,
+    round_robin,
+    split_round_robin,
+)
+from repro.graph.partition import (
+    horizontal_partition,
+    interval_shard_partition,
+    stride_mapping,
+    vertical_partition,
+)
+from repro.graph.structure import from_edges
+
+lines_st = st.lists(st.integers(0, 1 << 16), min_size=0, max_size=200)
+
+
+def mk_trace(lines, writes=None):
+    lines = np.asarray(lines, dtype=np.int64)
+    if writes is None:
+        writes = np.zeros(len(lines), dtype=bool)
+    return Trace(lines, np.asarray(writes, dtype=bool))
+
+
+# ---------------------------------------------------------------------------
+# trace combinators
+# ---------------------------------------------------------------------------
+
+
+@given(lines_st)
+def test_coalesce_idempotent(lines):
+    t = coalesce(mk_trace(lines))
+    t2 = coalesce(t)
+    np.testing.assert_array_equal(t.lines, t2.lines)
+    # no adjacent duplicates remain
+    if t.n > 1:
+        assert not np.any((t.lines[1:] == t.lines[:-1]) &
+                          (t.is_write[1:] == t.is_write[:-1]))
+
+
+@given(lines_st, lines_st)
+def test_concat_and_merges_preserve_multiset(a, b):
+    ta, tb = mk_trace(a), mk_trace(b)
+    for merged in (concat(ta, tb), round_robin(ta, tb),
+                   proportional_interleave(ta, tb)):
+        assert merged.n == ta.n + tb.n
+        np.testing.assert_array_equal(
+            np.sort(merged.lines), np.sort(np.concatenate([ta.lines, tb.lines]))
+        )
+
+
+@given(lines_st, st.integers(1, 5))
+def test_split_round_robin_partitions(lines, k):
+    t = mk_trace(lines)
+    parts = split_round_robin(t, k)
+    assert sum(p.n for p in parts) == t.n
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate([p.lines for p in parts]) if parts else np.array([])),
+        np.sort(t.lines),
+    )
+
+
+@given(lines_st)
+def test_round_robin_interleaves_fairly(lines):
+    ta, tb = mk_trace(lines), mk_trace([l + 1 for l in lines])
+    m = round_robin(ta, tb)
+    if ta.n:
+        # first two requests come from different streams
+        assert m.lines[0] == ta.lines[0]
+
+
+# ---------------------------------------------------------------------------
+# DRAM engine invariants
+# ---------------------------------------------------------------------------
+
+
+@given(lines_st)
+@settings(max_examples=30, deadline=None)
+def test_classification_counts_sum(lines):
+    cfg = dram_config("default")
+    bank, row = decode(np.asarray(lines, dtype=np.int64), cfg)
+    cls = classify_fast(bank, row, cfg.nbanks)
+    assert len(cls) == len(lines)
+    assert int((cls == 0).sum() + (cls == 1).sum() + (cls == 2).sum()) == len(lines)
+    # brute-force oracle: per-bank last-row
+    last = {}
+    for i, (b, r) in enumerate(zip(bank, row)):
+        want = 1 if b not in last else (0 if last[b] == r else 2)
+        assert cls[i] == want, (i, b, r)
+        last[b] = r
+
+
+@given(lines_st)
+@settings(max_examples=15, deadline=None)
+def test_scan_engine_stats_match_classification(lines):
+    if not lines:
+        return
+    cfg = dram_config("default")
+    t = mk_trace(lines)
+    rep = simulate_channel_scan(t, cfg)
+    bank, row = decode(t.lines, cfg)
+    cls = classify_fast(bank, row, cfg.nbanks)
+    assert rep.hits == int((cls == 0).sum())
+    assert rep.misses == int((cls == 1).sum())
+    assert rep.conflicts == int((cls == 2).sum())
+    # physical lower bound: the bus must carry every line
+    assert rep.cycles >= t.n * cfg.tBL
+
+
+@given(lines_st)
+@settings(max_examples=10, deadline=None)
+def test_scan_engine_monotone_in_prefix(lines):
+    """Appending requests never reduces total cycles."""
+    if len(lines) < 2:
+        return
+    cfg = dram_config("default")
+    half = mk_trace(lines[: len(lines) // 2])
+    full = mk_trace(lines)
+    assert simulate_channel_scan(full, cfg).cycles >= simulate_channel_scan(half, cfg).cycles
+
+
+# ---------------------------------------------------------------------------
+# partitioning invariants
+# ---------------------------------------------------------------------------
+
+edges_st = st.lists(
+    st.tuples(st.integers(0, 99), st.integers(0, 99)), min_size=1, max_size=300
+)
+
+
+@given(edges_st, st.sampled_from([16, 32, 64]))
+@settings(max_examples=25, deadline=None)
+def test_horizontal_partition_is_partition(edges, interval):
+    g = from_edges(100, np.asarray(edges), dedup=False, name="h")
+    parts = horizontal_partition(g, interval, by="src")
+    all_idx = np.concatenate([parts.edge_idx[p] for p in range(parts.k)])
+    assert len(all_idx) == g.m
+    np.testing.assert_array_equal(np.sort(all_idx), np.arange(g.m))
+    for p in range(parts.k):
+        lo, hi = parts.interval(p)
+        src, _ = parts.edges(p)
+        assert np.all((src >= lo) & (src < hi))
+
+
+@given(edges_st, st.sampled_from([16, 64]), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_vertical_partition_is_partition(edges, interval, chunks):
+    g = from_edges(100, np.asarray(edges), dedup=False, name="v")
+    parts = vertical_partition(g, interval, n_chunks=chunks)
+    all_idx = np.concatenate(
+        [parts.edge_idx[p][c] for p in range(parts.k) for c in range(chunks)]
+    )
+    np.testing.assert_array_equal(np.sort(all_idx), np.arange(g.m))
+    for p in range(parts.k):
+        lo, hi = parts.interval(p)
+        for c in range(chunks):
+            _, dst = parts.edges(p, c)
+            assert np.all((dst >= lo) & (dst < hi))
+
+
+@given(edges_st, st.sampled_from([16, 32]))
+@settings(max_examples=25, deadline=None)
+def test_interval_shard_partition_is_partition(edges, interval):
+    g = from_edges(100, np.asarray(edges), dedup=False, name="s")
+    shards = interval_shard_partition(g, interval)
+    all_idx = np.concatenate(
+        [shards.shard_edge_idx[i][j] for i in range(shards.q) for j in range(shards.q)]
+    )
+    np.testing.assert_array_equal(np.sort(all_idx), np.arange(g.m))
+
+
+@given(st.integers(1, 2000), st.integers(1, 40))
+def test_stride_mapping_is_permutation(n, q):
+    perm = stride_mapping(n, q)
+    assert len(perm) == n
+    np.testing.assert_array_equal(np.sort(perm), np.arange(n))
+
+
+# ---------------------------------------------------------------------------
+# accelerator semantics == reference fixed point (random graphs)
+# ---------------------------------------------------------------------------
+
+
+@given(edges_st, st.sampled_from(["bfs", "wcc"]),
+       st.sampled_from(["accugraph", "foregraph", "hitgraph", "thundergp"]))
+@settings(max_examples=12, deadline=None)
+def test_accelerators_reach_reference_fixed_point(edges, prob, accel):
+    from repro.configs.graphsim import default_config
+    from repro.core.accelerators.base import run_accelerator
+    from repro.graph.problems import PROBLEMS, reference_solve
+
+    g = from_edges(100, np.asarray(edges), name="rand")
+    if g.m == 0:  # all edges were self-loops
+        return
+    root = int(g.src[0])
+    ref, _ = reference_solve(g, PROBLEMS[prob], root=root)
+    import dataclasses
+
+    cfg = dataclasses.replace(default_config(accel), interval_size=64,
+                              engine="fast")
+    rep = run_accelerator(accel, g, PROBLEMS[prob], root=root, dram="default",
+                          config=cfg)
+    np.testing.assert_array_equal(rep.values, ref)
+
+
+# ---------------------------------------------------------------------------
+# sharding invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 4096), st.tuples(st.sampled_from([1, 2, 4, 8, 16]),
+                                       st.sampled_from([1, 2, 4, 8, 16])))
+def test_effective_batch_axes_product_divides(batch, sizes):
+    from repro.distributed import sharding as shd
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        devices = np.empty((sizes[0], sizes[1], 2), dtype=object)
+
+    axes = shd.effective_batch_axes(FakeMesh(), batch)
+    prod = 1
+    d = dict(zip(FakeMesh.axis_names, FakeMesh.devices.shape))
+    for a in axes:
+        prod *= d[a]
+    assert batch % prod == 0
+
+
+@given(st.tuples(st.integers(1, 200), st.integers(1, 200)),
+       st.sampled_from([(1, 1), (4, 2), (16, 16)]))
+def test_divisible_spec_always_divides(shape, mesh_shape):
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import sharding as shd
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty(mesh_shape, dtype=object)
+
+    spec = shd._divisible_spec(P("data", "model"), shape, FakeMesh())
+    d = dict(zip(FakeMesh.axis_names, mesh_shape))
+    for dim, entry in enumerate(spec):
+        if entry is not None:
+            assert shape[dim] % d[entry] == 0

@@ -1,0 +1,285 @@
+"""Training-substrate tests: optimizer, data determinism, checkpoint
+round-trips, fault-tolerant supervised training, MoE dropless equivalence.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import Model
+from repro.train import optimizer as opt
+from repro.train.checkpoint import Checkpointer
+from repro.train.data import DataConfig, Prefetcher, SyntheticLM, make_source
+from repro.train.fault_tolerance import (
+    StragglerMonitor,
+    SupervisorConfig,
+    run_supervised,
+)
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def tiny_model():
+    cfg = get_arch("qwen3_0_6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)), jnp.float32)
+    params = {"w": jnp.zeros((8, 8))}
+    ocfg = opt.OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                               weight_decay=0.0)
+    state = opt.init(ocfg, params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+        return opt.update(ocfg, grads, state, params)
+
+    for _ in range(150):
+        params, state, m = step(params, state)
+    assert float(jnp.mean((params["w"] - target) ** 2)) < 1e-2
+
+
+def test_adamw_bf16_moments_close_to_f32():
+    """bf16 moment compression must track the f32 optimizer closely."""
+    rng = np.random.default_rng(1)
+    target = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    p32 = {"w": jnp.zeros((16,))}
+    p16 = {"w": jnp.zeros((16,))}
+    c32 = opt.OptimizerConfig(lr=0.05, warmup_steps=0, weight_decay=0.0)
+    c16 = opt.OptimizerConfig(lr=0.05, warmup_steps=0, weight_decay=0.0,
+                              moment_dtype="bfloat16", aggressive=True)
+    s32, s16 = opt.init(c32, p32), opt.init(c16, p16)
+    assert s16["m"]["w"].dtype == jnp.bfloat16
+    assert s16["v"]["w"].dtype == jnp.bfloat16
+
+    def g(p):
+        return jax.grad(lambda q: jnp.mean((q["w"] - target) ** 2))(p)
+
+    for _ in range(50):
+        p32, s32, _ = opt.update(c32, g(p32), s32, p32)
+        p16, s16, _ = opt.update(c16, g(p16), s16, p16)
+    np.testing.assert_allclose(np.asarray(p16["w"]), np.asarray(p32["w"]),
+                               rtol=0.1, atol=0.05)
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    ocfg = opt.OptimizerConfig(lr=1.0, clip_norm=1.0, warmup_steps=0,
+                               weight_decay=0.0)
+    state = opt.init(ocfg, params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = opt.update(ocfg, huge, state, params)
+    assert float(metrics["grad_norm"]) > 1e5  # pre-clip norm is reported
+
+
+def test_schedule_warmup_and_cosine():
+    ocfg = opt.OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                               min_lr_frac=0.1)
+    lrs = [float(opt.schedule(ocfg, jnp.int32(s))) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 < lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_data_deterministic_and_restartable():
+    cfg = DataConfig(vocab=100, global_batch=4, seq_len=32)
+    a = SyntheticLM(cfg)
+    b = SyntheticLM(cfg)
+    for step in (0, 7, 123):
+        np.testing.assert_array_equal(a.batch(step)["tokens"], b.batch(step)["tokens"])
+    x = a.batch(5)
+    assert x["tokens"].shape == (4, 32) and x["labels"].shape == (4, 32)
+    np.testing.assert_array_equal(x["tokens"][:, 1:], x["labels"][:, :-1])
+
+
+def test_prefetcher_yields_in_order():
+    cfg = DataConfig(vocab=50, global_batch=2, seq_len=8)
+    src = SyntheticLM(cfg)
+    pf = Prefetcher(src, start_step=3, depth=2)
+    try:
+        for want in (3, 4, 5):
+            step, batch = next(pf)
+            assert step == want
+            np.testing.assert_array_equal(batch["tokens"], src.batch(want)["tokens"])
+    finally:
+        pf.close()
+
+
+def test_memmap_corpus(tmp_path):
+    data = np.arange(10_000, dtype=np.int32) % 777
+    path = tmp_path / "tokens.bin"
+    data.tofile(path)
+    cfg = DataConfig(vocab=777, global_batch=4, seq_len=64, kind="memmap",
+                     path=str(path))
+    src = make_source(cfg)
+    b0 = src.batch(0)
+    np.testing.assert_array_equal(b0["tokens"].shape, (4, 64))
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+    np.testing.assert_array_equal(src.batch(3)["tokens"], src.batch(3)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = {
+        "a": jnp.asarray([[1.5, 2.5]], jnp.bfloat16),
+        "b": {"c": jnp.arange(5, dtype=jnp.int32), "d": jnp.float32(3.0)},
+    }
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(10, tree)
+    restored, step = ck.restore(jax.eval_shape(lambda: tree))
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": jnp.float32(s)})
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=1)
+    ck.save_async(7, {"x": jnp.arange(1000)})
+    ck.wait()
+    restored, step = ck.restore({"x": jnp.arange(1000)})
+    assert step == 7
+    np.testing.assert_array_equal(restored["x"], np.arange(1000))
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(1, {"x": jnp.float32(1)})
+    os.makedirs(tmp_path / "step_00000002.tmp")  # simulated crashed save
+    assert ck.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_supervised_training_survives_injected_failures(tmp_path):
+    cfg, model, params = tiny_model()
+    tcfg = TrainConfig(optimizer=opt.OptimizerConfig(lr=1e-3, warmup_steps=0,
+                                                     total_steps=30))
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    state = opt.init(tcfg.optimizer, params)
+    dcfg = DataConfig(vocab=cfg.vocab, global_batch=2, seq_len=16)
+    src = SyntheticLM(dcfg)
+
+    class Dev:
+        def batch(self, i):
+            return {k: jnp.asarray(v) for k, v in src.batch(i).items()}
+
+    failures = {7, 13}
+
+    def fail_at(step):
+        if step in failures:
+            failures.discard(step)
+            return True
+        return False
+
+    ck = Checkpointer(str(tmp_path), keep=2)
+    p2, s2, history = run_supervised(
+        train_step=step_fn, params=params, opt_state=state,
+        data_source=Dev(), n_steps=20, ckpt=ck,
+        cfg=SupervisorConfig(checkpoint_every=5, async_checkpoint=False),
+        fail_at=fail_at, log_every=0, log=lambda s: None,
+    )
+    steps = [s for s, _ in history]
+    assert steps[-1] == 20
+    # recovery resumed from checkpoints (steps may repeat, never skip)
+    assert set(range(1, 21)).issubset(set(steps))
+
+    # and matches an uninterrupted run bit-for-bit at the end
+    ck2 = Checkpointer(str(tmp_path / "clean"), keep=2)
+    p3, s3, _ = run_supervised(
+        train_step=step_fn, params=model.init(jax.random.PRNGKey(0)),
+        opt_state=opt.init(tcfg.optimizer, model.init(jax.random.PRNGKey(0))),
+        data_source=Dev(), n_steps=20, ckpt=ck2,
+        cfg=SupervisorConfig(checkpoint_every=5, async_checkpoint=False),
+        log_every=0, log=lambda s: None,
+    )
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p3)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(window=16, threshold=6.0)
+    flagged = []
+    for step in range(30):
+        t = 0.1 + (0.001 * (step % 3))
+        if step == 25:
+            t = 2.0  # straggler
+        if mon.record(step, t):
+            flagged.append(step)
+    assert flagged == [25]
+
+
+# ---------------------------------------------------------------------------
+# MoE: dropless equivalence with a dense mixture reference
+# ---------------------------------------------------------------------------
+
+
+def test_moe_dropless_matches_dense_mixture():
+    import dataclasses as dc
+
+    from repro.models.moe import moe, moe_params
+    from repro.models.layers import mlp
+
+    cfg = dc.replace(
+        get_arch("qwen2_moe_a2_7b").reduced(),
+        n_experts=4, top_k=2, n_shared_experts=0, expert_d_ff=32,
+        moe_capacity_factor=64.0,  # dropless
+    )
+    params = moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)) * 0.1, jnp.float32)
+    out, aux = moe(params, cfg, x)
+
+    # dense reference: run every expert on every token, weight by the
+    # renormalised top-k gates
+    logits = jnp.einsum("bsd,de->bse", x, params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    top_vals = top_vals / top_vals.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        pe = {
+            "wg": params["wg"][e], "wi": params["wi"][e], "wo": params["wo"][e],
+        }
+        ye = mlp(pe, x)
+        gate = jnp.sum(jnp.where(top_idx == e, top_vals, 0.0), axis=-1)
+        ref = ref + gate[..., None] * ye
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+    assert float(aux["moe_lb_loss"]) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz

@@ -1,0 +1,167 @@
+"""Request-trace abstractions and DRAM engine tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dram import DRAM_CONFIGS, dram_config
+from repro.core.engine import (
+    classify_fast,
+    decode,
+    simulate_channel_fast,
+    simulate_channel_scan,
+)
+from repro.core.memory_layout import MemoryLayout
+from repro.core.trace import (
+    Trace,
+    coalesce,
+    concat,
+    proportional_interleave,
+    random_read,
+    round_robin,
+    seq_read,
+    seq_write,
+)
+
+
+def test_seq_read_lines():
+    t = seq_read(0, 256)
+    assert t.n == 4  # 256 B = 4 lines
+    assert not t.is_write.any()
+    t = seq_read(60, 8)  # straddles a line boundary
+    assert t.n == 2
+
+
+def test_coalesce_merges_adjacent_only():
+    t = Trace(np.array([0, 0, 1, 0]), np.zeros(4, dtype=bool))
+    c = coalesce(t)
+    assert c.lines.tolist() == [0, 1, 0]  # non-adjacent duplicate kept
+
+
+def test_random_read_coalesces_same_line():
+    # 16 int32 indices in the same cache line
+    t = random_read(0, np.arange(16), 4)
+    assert t.n == 1
+
+
+def test_round_robin_interleaves():
+    a = Trace(np.array([1, 2, 3]), np.zeros(3, dtype=bool))
+    b = Trace(np.array([10, 20, 30]), np.zeros(3, dtype=bool))
+    rr = round_robin(a, b)
+    assert rr.lines.tolist() == [1, 10, 2, 20, 3, 30]
+
+
+def test_proportional_interleave_preserves_order_and_length():
+    a = Trace(np.arange(100), np.zeros(100, dtype=bool))
+    b = Trace(np.arange(1000, 1010), np.ones(10, dtype=bool))
+    m = proportional_interleave(a, b)
+    assert m.n == 110
+    # order within each stream preserved
+    assert np.all(np.diff(m.lines[~m.is_write]) > 0)
+    assert np.all(np.diff(m.lines[m.is_write]) > 0)
+
+
+def test_memory_layout_rows_do_not_overlap():
+    lay = MemoryLayout()
+    a = lay.alloc("a", 100)
+    b = lay.alloc("b", 5000)
+    c = lay.alloc("c", 1)
+    assert a % 8192 == 0 and b % 8192 == 0 and c % 8192 == 0
+    assert len({a, b, c}) == 3
+
+
+# ---------------- engine ----------------
+
+
+def test_sequential_stream_is_row_hits():
+    cfg = dram_config("default")
+    t = seq_read(0, 8192)  # exactly one row
+    r = simulate_channel_scan(t, cfg)
+    assert r.misses == 1  # first touch activates
+    assert r.hits == r.requests - 1
+    assert r.conflicts == 0
+
+
+def test_row_ping_pong_is_conflicts():
+    cfg = dram_config("default")
+    # two addresses in the same bank, different rows: alternate
+    lpr, nb = cfg.lines_per_row, cfg.nbanks
+    line_a = 0  # bank 0 row 0
+    line_b = lpr * nb  # bank 0 row 1
+    lines = np.array([line_a, line_b] * 50)
+    t = Trace(lines, np.zeros(100, dtype=bool))
+    r = simulate_channel_scan(t, cfg)
+    assert r.conflicts == 99 and r.misses == 1
+    # conflict-bound stream is much slower than a sequential one
+    seq = simulate_channel_scan(seq_read(0, 6400), cfg)
+    assert r.time_ns > 3 * seq.time_ns
+
+
+def test_bandwidth_utilization_near_peak_for_streaming():
+    cfg = dram_config("default")
+    t = seq_read(0, 4 << 20)  # 4 MiB stream
+    r = simulate_channel_scan(t, cfg)
+    assert r.bw_utilization > 0.85  # streaming should approach peak BW
+
+
+def test_hbm_conflicts_cost_more_than_ddr4():
+    """Insight 6 mechanics: HBM's smaller row buffer -> more row switches
+    on the same access pattern."""
+    ddr4 = dram_config("default")
+    hbm = dram_config("hbm")
+    rng = np.random.default_rng(0)
+    lines = rng.integers(0, 1 << 16, size=4096)
+    t = Trace(lines, np.zeros(4096, dtype=bool))
+    r4 = simulate_channel_scan(t, ddr4)
+    rh = simulate_channel_scan(t, hbm)
+    assert rh.conflicts >= r4.conflicts * 0.9
+    assert rh.time_ns > r4.time_ns * 0.9
+
+
+def test_scan_and_fast_classification_agree():
+    cfg = dram_config("default")
+    rng = np.random.default_rng(1)
+    lines = np.concatenate([
+        np.arange(2048),
+        rng.integers(0, 1 << 14, size=2048),
+    ])
+    t = Trace(lines, np.zeros(len(lines), dtype=bool))
+    rs = simulate_channel_scan(t, cfg)
+    rf = simulate_channel_fast(t, cfg)
+    assert (rs.hits, rs.misses, rs.conflicts) == (rf.hits, rf.misses, rf.conflicts)
+    # fast engine time within 2x of scan engine on mixed traces
+    assert 0.5 < rf.time_ns / rs.time_ns < 2.0
+
+
+@given(
+    n_req=st.integers(1, 600),
+    spread=st.integers(1, 1 << 18),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_engine_invariants(n_req, spread, seed):
+    cfg = dram_config("default")
+    rng = np.random.default_rng(seed)
+    lines = rng.integers(0, spread, size=n_req)
+    t = Trace(lines, rng.random(n_req) < 0.3)
+    r = simulate_channel_scan(t, cfg)
+    assert r.hits + r.misses + r.conflicts == n_req
+    assert r.bytes_total == n_req * 64
+    # time at least the bus-transfer lower bound, at most worst-case serial
+    assert r.cycles >= n_req * cfg.tBL
+    worst = n_req * (cfg.tRP + cfg.tRCD + cfg.tCL + cfg.tBL + cfg.tRC)
+    assert r.cycles <= worst + cfg.tRC
+    # classification agrees with the vectorised classifier
+    bank, row = decode(t.lines, cfg)
+    cls = classify_fast(bank, row, cfg.nbanks)
+    assert (cls == 0).sum() == r.hits
+    assert (cls == 1).sum() == r.misses
+    assert (cls == 2).sum() == r.conflicts
+
+
+def test_all_dram_configs_sane():
+    for name, cfg in DRAM_CONFIGS.items():
+        assert cfg.tBL >= 1 and cfg.nbanks >= 8
+        assert cfg.lines_per_row >= 16
+        t = seq_read(0, 64 * 1024)
+        r = simulate_channel_scan(t, cfg)
+        assert r.time_ns > 0
