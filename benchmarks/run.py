@@ -3,6 +3,7 @@ roofline summary.
 
     PYTHONPATH=src python -m benchmarks.run                  # everything
     PYTHONPATH=src python -m benchmarks.run --benches tab4,fig9 --graphs sd,db
+    PYTHONPATH=src python -m benchmarks.run --workers 8      # parallel sweeps
 
 Benches (paper artifact -> bench):
     tab4      Tab.4 / Fig.8  : DDR4 runtimes, 4 accels x graphs x BFS/PR/WCC
@@ -16,86 +17,71 @@ Benches (paper artifact -> bench):
     kernels   (framework)    : Pallas-kernel micro-bench, us_per_call
     roofline  (framework)    : summarize results/dryrun into the roofline CSV
 
+Every paper bench is a thin ``SweepSpec`` executed through
+``repro.sweep.run_sweep``: results are content-address cached (re-running a
+bench is near-instant, and fig9/fig10 share tab4's BFS scenarios), sweeps
+parallelise with --workers, and one failing scenario no longer kills the
+whole artifact run.
+
 CSV outputs land in --out (default results/bench); a validation summary is
 printed and written to validation.json.
 """
 from __future__ import annotations
 
 import argparse
-import csv
 import json
 import os
 import time
 
 import numpy as np
 
-from repro.configs.graphsim import NONE, default_config
-from repro.core.accelerators.base import AccelConfig, run_accelerator
+from repro.configs.graphsim import NONE
 from repro.core.dram import dram_config
-from repro.graph.generators import PAPER_GRAPHS, paper_suite
-from repro.graph.problems import PROBLEMS
+from repro.sweep import ConfigOverride, SweepSpec, rank, run_sweep, spearman, write_csv
 
 from benchmarks import paper_data as paper
 
 DEFAULT_GRAPHS = ["sd", "db", "yt", "wt", "pk", "rd", "bk", "r21", "lj", "or", "tw", "r24"]
 
 
-def _write_csv(path: str, rows: list[dict]):
-    if not rows:
-        return
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    keys = list(rows[0].keys())
-    with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=keys)
-        w.writeheader()
-        w.writerows(rows)
-    print(f"  wrote {path} ({len(rows)} rows)")
+def _write(path: str, rows: list[dict]):
+    write_csv(path, rows)
+    if rows:
+        print(f"  wrote {path} ({len(rows)} rows)")
 
 
-def _run(accel, g, problem, root, dram=None, config=None):
-    cfg = config or default_config(accel)
-    return run_accelerator(accel, g, PROBLEMS[problem], root=root,
-                           dram=dram or dram_config(accel if dram is None else dram),
-                           config=cfg)
-
-
-def _rank(values: dict) -> list:
-    return sorted(values, key=lambda k: values[k])
-
-
-def _spearman(a: list, b: list) -> float:
-    ra = {k: i for i, k in enumerate(a)}
-    rb = {k: i for i, k in enumerate(b)}
-    keys = list(ra)
-    x = np.array([ra[k] for k in keys], float)
-    y = np.array([rb[k] for k in keys], float)
-    if x.std() == 0 or y.std() == 0:
-        return 1.0
-    return float(np.corrcoef(x, y)[0, 1])
+def _reports(result):
+    """(scenario, SimReport, record) triples of the completed scenarios."""
+    out = []
+    for r in result.results:
+        rep = r.report
+        if rep is None:
+            err = (r.record.get("error") or "").strip()
+            print(f"  ERROR {r.scenario.scenario_id}: "
+                  f"{err.splitlines()[-1] if err else 'unknown error'}")
+            continue
+        out.append((r.scenario, rep, r.record))
+    return out
 
 
 # ---------------------------------------------------------------------------
 
 
-def bench_tab4(graphs, out, validation):
-    suite = paper_suite(graphs)
+def bench_tab4(graphs, out, validation, sweep):
+    spec = SweepSpec(name="tab4", accelerators=tuple(paper.ACCELS),
+                     graphs=tuple(graphs), problems=tuple(paper.PROBLEMS_TAB4))
     rows = []
     ours: dict = {}
-    for gname, g in suite.items():
-        root = PAPER_GRAPHS[gname].root
-        for accel in paper.ACCELS:
-            for prob in paper.PROBLEMS_TAB4:
-                t0 = time.time()
-                rep = _run(accel, g, prob, root, dram="default")
-                rows.append(dict(
-                    graph=gname, accelerator=accel, problem=prob,
-                    runtime_s=rep.runtime_s, mteps=rep.mteps,
-                    iterations=rep.iterations, bytes_per_edge=rep.bytes_per_edge,
-                    bw_utilization=rep.timing.bw_utilization,
-                    wall_s=round(time.time() - t0, 2),
-                ))
-                ours.setdefault((gname, prob), {})[accel] = rep.runtime_s
-    _write_csv(os.path.join(out, "tab4_ddr4_runtimes.csv"), rows)
+    for s, rep, rec in _reports(sweep(spec)):
+        rows.append(dict(
+            graph=s.graph.name, accelerator=s.accelerator, problem=s.problem,
+            runtime_s=rep.runtime_s, mteps=rep.mteps,
+            iterations=rep.iterations, bytes_per_edge=rep.bytes_per_edge,
+            bw_utilization=rep.timing.bw_utilization,
+            wall_s=rec.get("wall_s", 0.0),
+        ))
+        ours.setdefault((s.graph.name, s.problem), {})[s.accelerator] = rep.runtime_s
+    _write(os.path.join(out, "tab4_ddr4_runtimes.csv"), rows)
 
     # validation: accelerator rank agreement vs the paper per (graph, prob)
     corrs, top_match = [], []
@@ -103,8 +89,8 @@ def bench_tab4(graphs, out, validation):
         if gname not in paper.TAB4:
             continue
         pvals = {a: paper.TAB4[gname][a][prob] for a in paper.ACCELS}
-        corrs.append(_spearman(_rank(vals), _rank(pvals)))
-        top_match.append(_rank(vals)[0] == _rank(pvals)[0])
+        corrs.append(spearman(rank(vals), rank(pvals)))
+        top_match.append(rank(vals)[0] == rank(pvals)[0])
     validation["tab4_rank_spearman_mean"] = float(np.mean(corrs)) if corrs else None
     validation["tab4_fastest_accel_match_frac"] = (
         float(np.mean(top_match)) if top_match else None
@@ -135,33 +121,36 @@ def bench_tab4(graphs, out, validation):
         )
 
 
-def bench_tab5(graphs, out, validation):
-    suite = paper_suite(graphs)
-    rows = []
-    for gname, g in suite.items():
-        root = PAPER_GRAPHS[gname].root
-        for accel in ("hitgraph", "thundergp"):
-            for prob in ("sssp", "spmv"):
-                rep = _run(accel, g, prob, root, dram="default")
-                rows.append(dict(graph=gname, accelerator=accel, problem=prob,
-                                 runtime_s=rep.runtime_s, mteps=rep.mteps,
-                                 iterations=rep.iterations))
-    _write_csv(os.path.join(out, "tab5_weighted.csv"), rows)
+def bench_tab5(graphs, out, validation, sweep):
+    spec = SweepSpec(name="tab5", accelerators=("hitgraph", "thundergp"),
+                     graphs=tuple(graphs), problems=("sssp", "spmv"))
+    rows = [dict(graph=s.graph.name, accelerator=s.accelerator, problem=s.problem,
+                 runtime_s=rep.runtime_s, mteps=rep.mteps, iterations=rep.iterations)
+            for s, rep, _ in _reports(sweep(spec))]
+    _write(os.path.join(out, "tab5_weighted.csv"), rows)
     # paper: weighted runs are slower than unweighted due to 12B edges,
     # otherwise no significant differences
     validation["tab5_ran"] = len(rows)
 
 
-def bench_tab6(graphs, out, validation):
-    suite = paper_suite(graphs)
+def bench_tab6(graphs, out, validation, sweep):
+    spec = SweepSpec(name="tab6", accelerators=tuple(paper.ACCELS),
+                     graphs=tuple(graphs), problems=("bfs",),
+                     drams=("default", "ddr3", "hbm"))
+    reps = {(s.graph.name, s.accelerator, s.dram.name): rep
+            for s, rep, _ in _reports(sweep(spec))}
     rows = []
     speedups = {"ddr3": [], "hbm": []}
-    for gname, g in suite.items():
-        root = PAPER_GRAPHS[gname].root
+    for gname in graphs:
         for accel in paper.ACCELS:
-            base = _run(accel, g, "bfs", root, dram="default").runtime_s
+            base_rep = reps.get((gname, accel, "default"))
+            if base_rep is None:
+                continue
+            base = base_rep.runtime_s
             for dram in ("ddr3", "hbm"):
-                r = _run(accel, g, "bfs", root, dram=dram)
+                r = reps.get((gname, accel, dram))
+                if r is None:
+                    continue
                 sp = base / max(r.runtime_s, 1e-12)
                 rows.append(dict(graph=gname, accelerator=accel, dram=dram,
                                  runtime_s=r.runtime_s, speedup_over_ddr4=sp,
@@ -169,7 +158,7 @@ def bench_tab6(graphs, out, validation):
                                  row_conflicts=r.timing.conflicts,
                                  bw_utilization=r.timing.bw_utilization))
                 speedups[dram].append(sp)
-    _write_csv(os.path.join(out, "tab6_dram_types.csv"), rows)
+    _write(os.path.join(out, "tab6_dram_types.csv"), rows)
     # insight 6: HBM does not outperform (paper: HBM slower than DDR4;
     # DDR3 roughly on par or faster at these access patterns)
     validation["insight6_hbm_mean_speedup"] = float(np.mean(speedups["hbm"]))
@@ -177,28 +166,35 @@ def bench_tab6(graphs, out, validation):
     validation["insight6_hbm_not_faster"] = bool(np.mean(speedups["hbm"]) <= 1.05)
 
 
-def bench_tab7(graphs, out, validation):
+TAB7_CHANNELS = (("default", (1, 2, 4)), ("ddr3", (1, 2, 4)), ("hbm", (1, 2, 4, 8)))
+
+
+def bench_tab7(graphs, out, validation, sweep):
     targets = [g for g in ("db", "lj", "or", "rd") if g in graphs] or ["db", "rd"]
-    suite = paper_suite(targets)
+    drams = tuple((d, c) for d, chans in TAB7_CHANNELS for c in chans)
+    spec = SweepSpec(name="tab7", accelerators=("hitgraph", "thundergp"),
+                     graphs=tuple(targets), problems=("bfs",), drams=drams)
+    reps = {(s.graph.name, s.accelerator, s.dram.name, s.dram.channels): rep
+            for s, rep, _ in _reports(sweep(spec))}
     rows = []
     scaling: dict = {}
-    for gname, g in suite.items():
-        root = PAPER_GRAPHS[gname].root
+    for gname in targets:
         for accel in ("hitgraph", "thundergp"):
-            for dram_name, chans in (("default", (1, 2, 4)), ("ddr3", (1, 2, 4)),
-                                     ("hbm", (1, 2, 4, 8))):
-                base = None
+            for dram_name, chans in TAB7_CHANNELS:
+                base_rep = reps.get((gname, accel, dram_name, chans[0]))
+                if base_rep is None:
+                    continue  # no 1-channel baseline -> speedups undefined
+                base = base_rep.runtime_s
                 for c in chans:
-                    cfg = default_config(accel, channels=c)
-                    dram = dram_config(dram_name, channels=c)
-                    r = _run(accel, g, "bfs", root, dram=dram, config=cfg)
-                    base = base or r.runtime_s
+                    r = reps.get((gname, accel, dram_name, c))
+                    if r is None:
+                        continue
                     sp = base / max(r.runtime_s, 1e-12)
                     rows.append(dict(graph=gname, accelerator=accel,
                                      dram=dram_name, channels=c,
                                      runtime_s=r.runtime_s, speedup=sp))
                     scaling.setdefault((accel, dram_name), {}).setdefault(c, []).append(sp)
-    _write_csv(os.path.join(out, "tab7_channel_scaling.csv"), rows)
+    _write(os.path.join(out, "tab7_channel_scaling.csv"), rows)
     # insights 7/8: HitGraph scales ~linearly; ThunderGP sub-linearly
     hit4 = np.mean(scaling.get(("hitgraph", "default"), {}).get(4, [1.0]))
     tgp4 = np.mean(scaling.get(("thundergp", "default"), {}).get(4, [1.0]))
@@ -209,43 +205,47 @@ def bench_tab7(graphs, out, validation):
     validation["insight9_footprint_ratio_4ch"] = "thundergp n*c+m+n*c vs hitgraph n+m+n (structural; see DESIGN.md)"
 
 
-def bench_tab8(graphs, out, validation):
+TAB8_ABLATIONS = {
+    "accugraph": [("none", NONE),
+                  ("prefetch_skipping", frozenset({"prefetch_skipping"})),
+                  ("partition_skipping", frozenset({"partition_skipping"})),
+                  ("all", frozenset({"all"}))],
+    "foregraph": [("none", NONE),
+                  ("edge_shuffling", frozenset({"edge_shuffling"})),
+                  ("shard_skipping", frozenset({"shard_skipping"})),
+                  ("stride_mapping", frozenset({"stride_mapping"})),
+                  ("all", frozenset({"all"}))],
+    "hitgraph": [("none", NONE),
+                 ("partition_skipping", frozenset({"partition_skipping"})),
+                 ("edge_sorting", frozenset({"edge_sorting"})),
+                 ("update_combining", frozenset({"edge_sorting", "update_combining"})),
+                 ("update_filtering", frozenset({"update_filtering"})),
+                 ("all", frozenset({"all"}))],
+    "thundergp": [("none", NONE),
+                  ("chunk_scheduling", frozenset({"chunk_scheduling"})),
+                  ("all", frozenset({"all"}))],
+}
+
+
+def bench_tab8(graphs, out, validation, sweep):
     targets = [g for g in ("db", "lj", "or", "rd") if g in graphs] or ["db", "rd"]
-    suite = paper_suite(targets)
-    ablations = {
-        "accugraph": [("none", NONE),
-                      ("prefetch_skipping", frozenset({"prefetch_skipping"})),
-                      ("partition_skipping", frozenset({"partition_skipping"})),
-                      ("all", frozenset({"all"}))],
-        "foregraph": [("none", NONE),
-                      ("edge_shuffling", frozenset({"edge_shuffling"})),
-                      ("shard_skipping", frozenset({"shard_skipping"})),
-                      ("stride_mapping", frozenset({"stride_mapping"})),
-                      ("all", frozenset({"all"}))],
-        "hitgraph": [("none", NONE),
-                     ("partition_skipping", frozenset({"partition_skipping"})),
-                     ("edge_sorting", frozenset({"edge_sorting"})),
-                     ("update_combining", frozenset({"edge_sorting", "update_combining"})),
-                     ("update_filtering", frozenset({"update_filtering"})),
-                     ("all", frozenset({"all"}))],
-        "thundergp": [("none", NONE),
-                      ("chunk_scheduling", frozenset({"chunk_scheduling"})),
-                      ("all", frozenset({"all"}))],
-    }
-    rows = []
     results: dict = {}
-    for gname, g in suite.items():
-        root = PAPER_GRAPHS[gname].root
-        for accel, opts in ablations.items():
-            for opt_name, opt_set in opts:
-                cfg = default_config(accel)
-                cfg = AccelConfig(interval_size=cfg.interval_size, n_pes=cfg.n_pes,
-                                  optimizations=opt_set, engine=cfg.engine)
-                r = _run(accel, g, "bfs", root, dram="default", config=cfg)
-                rows.append(dict(graph=gname, accelerator=accel,
-                                 optimization=opt_name, runtime_s=r.runtime_s))
-                results[(accel, opt_name, gname)] = r.runtime_s
-    _write_csv(os.path.join(out, "tab8_optimizations.csv"), rows)
+    for accel, opts in TAB8_ABLATIONS.items():
+        spec = SweepSpec(
+            name=f"tab8-{accel}", accelerators=(accel,), graphs=tuple(targets),
+            problems=("bfs",),
+            overrides=tuple(ConfigOverride(label=nm, optimizations=opt)
+                            for nm, opt in opts),
+        )
+        for s, rep, _ in _reports(sweep(spec)):
+            results[(s.accelerator, s.label, s.graph.name)] = rep.runtime_s
+    rows = [dict(graph=gname, accelerator=accel, optimization=opt_name,
+                 runtime_s=results[(accel, opt_name, gname)])
+            for gname in targets
+            for accel, opts in TAB8_ABLATIONS.items()
+            for opt_name, _ in opts
+            if (accel, opt_name, gname) in results]
+    _write(os.path.join(out, "tab8_optimizations.csv"), rows)
 
     # directional checks from Sect. 4.5 / Fig. 13
     def ratio(accel, opt, gname):
@@ -253,46 +253,40 @@ def bench_tab8(graphs, out, validation):
         b = results.get((accel, "none", gname))
         return a / b if a and b else None
 
-    shuf = [ratio("foregraph", "edge_shuffling", g) for g in suite]
+    shuf = [ratio("foregraph", "edge_shuffling", g) for g in targets]
     shuf = [s for s in shuf if s]
     validation["tab8_edge_shuffling_alone_hurts"] = bool(shuf and np.mean(shuf) > 1.0)
-    allv = [ratio(a, "all", g) for a in ablations for g in suite
+    allv = [ratio(a, "all", g) for a in TAB8_ABLATIONS for g in targets
             if results.get((a, "all", g))]
     allv = [v for v in allv if v]
     validation["tab8_all_opts_helps_mean_ratio"] = float(np.mean(allv)) if allv else None
 
 
-def bench_fig9(graphs, out, validation):
-    suite = paper_suite(graphs)
-    rows = []
-    for gname, g in suite.items():
-        root = PAPER_GRAPHS[gname].root
-        for accel in paper.ACCELS:
-            r = _run(accel, g, "bfs", root, dram="default")
-            rows.append(dict(
-                graph=gname, accelerator=accel,
-                iterations=r.iterations,
-                bytes_per_edge=r.bytes_per_edge,
-                values_read_per_iteration=r.values_read_per_iteration,
-                edges_read_per_iteration=r.edges_read_per_iteration,
-            ))
-    _write_csv(os.path.join(out, "fig9_critical_metrics.csv"), rows)
+def bench_fig9(graphs, out, validation, sweep):
+    # Same scenarios as tab4's BFS column -> pure cache hits after tab4.
+    spec = SweepSpec(name="fig9", accelerators=tuple(paper.ACCELS),
+                     graphs=tuple(graphs), problems=("bfs",))
+    rows = [dict(graph=s.graph.name, accelerator=s.accelerator,
+                 iterations=rep.iterations,
+                 bytes_per_edge=rep.bytes_per_edge,
+                 values_read_per_iteration=rep.values_read_per_iteration,
+                 edges_read_per_iteration=rep.edges_read_per_iteration)
+            for s, rep, _ in _reports(sweep(spec))]
+    _write(os.path.join(out, "fig9_critical_metrics.csv"), rows)
 
 
-def bench_fig10(graphs, out, validation):
-    suite = paper_suite(graphs)
-    rows = []
-    for gname, g in suite.items():
-        root = PAPER_GRAPHS[gname].root
-        for accel in paper.ACCELS:
-            r = _run(accel, g, "bfs", root, dram="default")
-            rows.append(dict(graph=gname, accelerator=accel,
-                             skewness=g.degree_skewness, avg_degree=g.avg_degree,
-                             mreps=r.mreps, mteps=r.mteps))
-    _write_csv(os.path.join(out, "fig10_skewness.csv"), rows)
+def bench_fig10(graphs, out, validation, sweep):
+    spec = SweepSpec(name="fig10", accelerators=tuple(paper.ACCELS),
+                     graphs=tuple(graphs), problems=("bfs",))
+    rows = [dict(graph=s.graph.name, accelerator=s.accelerator,
+                 skewness=rec["graph_stats"]["degree_skewness"],
+                 avg_degree=rec["graph_stats"]["avg_degree"],
+                 mreps=rep.mreps, mteps=rep.mteps)
+            for s, rep, rec in _reports(sweep(spec))]
+    _write(os.path.join(out, "fig10_skewness.csv"), rows)
 
 
-def bench_kernels(graphs, out, validation):
+def bench_kernels(graphs, out, validation, sweep):
     """Micro-bench: name,us_per_call for each Pallas kernel (interpret mode
     on CPU — correctness-path timing, not TPU perf) and its oracle."""
     import jax
@@ -334,12 +328,12 @@ def bench_kernels(graphs, out, validation):
     vv = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
     timeit("flash_attention_pallas_interp",
            lambda: flash_attention(q, k, vv, interpret=True).block_until_ready())
-    _write_csv(os.path.join(out, "kernels_microbench.csv"), rows)
+    _write(os.path.join(out, "kernels_microbench.csv"), rows)
     for r in rows:
         print(f"  {r['name']},{r['us_per_call']}")
 
 
-def bench_roofline(graphs, out, validation, dryrun_dir="results/dryrun"):
+def bench_roofline(graphs, out, validation, sweep, dryrun_dir="results/dryrun"):
     """Summarize the dry-run JSONs into the EXPERIMENTS.md roofline table."""
     rows = []
     for mesh in ("single", "multi"):
@@ -361,7 +355,7 @@ def bench_roofline(graphs, out, validation, dryrun_dir="results/dryrun"):
                 useful_flops_ratio=round(rec.get("useful_flops_ratio") or 0, 3),
                 temp_gib=round(rec["memory"].get("temp_bytes", 0) / 2**30, 2),
             ))
-    _write_csv(os.path.join(out, "roofline_summary.csv"), rows)
+    _write(os.path.join(out, "roofline_summary.csv"), rows)
     if rows:
         dom = {}
         for r in rows:
@@ -388,15 +382,25 @@ def main() -> None:
     ap.add_argument("--benches", default=",".join(BENCHES))
     ap.add_argument("--graphs", default=",".join(DEFAULT_GRAPHS))
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="sweep process-pool size; <=1 runs serially")
+    ap.add_argument("--cache", default="results/sweep_cache",
+                    help="sweep result cache directory ('' disables caching)")
     args = ap.parse_args()
     graphs = [g for g in args.graphs.split(",") if g]
+
+    def sweep(spec):
+        return run_sweep(spec, cache_dir=args.cache or None,
+                         workers=args.workers,
+                         progress=lambda msg: print(f"  {msg}", flush=True))
+
     validation: dict = {}
     for name in args.benches.split(","):
         if not name:
             continue
         print(f"[bench] {name} ...", flush=True)
         t0 = time.time()
-        BENCHES[name](graphs, args.out, validation)
+        BENCHES[name](graphs, args.out, validation, sweep)
         print(f"  done in {time.time() - t0:.1f}s", flush=True)
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, "validation.json"), "w") as f:

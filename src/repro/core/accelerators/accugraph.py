@@ -34,8 +34,6 @@ from repro.core.accelerators.base import (
     Accelerator,
     INF,
     PhasedTrace,
-    accumulate_np,
-    edge_candidates_np,
 )
 from repro.core.memory_layout import MemoryLayout
 from repro.core.metrics import IterationStats
@@ -109,16 +107,16 @@ class AccuGraph(Accelerator):
                 # --- semantics ---
                 src_vals = (snapshot if problem.kind == "acc" else values)[src]
                 if problem.kind == "min":
-                    cand = edge_candidates_np(problem, src_vals, None, None)
-                    acc = accumulate_np(problem, cand, dst, g.n)
+                    cand = problem.edge_candidates_np(src_vals)
+                    acc = problem.accumulate_np(cand, dst, g.n)
                     new = np.minimum(values, acc)
                     changed = new < values
                 else:
-                    cand = edge_candidates_np(
-                        problem, src_vals, None,
+                    cand = problem.edge_candidates_np(
+                        src_vals, None,
                         src_deg[src] if src_deg is not None else None,
                     )
-                    acc = accumulate_np(problem, cand, dst, g.n)
+                    acc = problem.accumulate_np(cand, dst, g.n)
                     scale = 0.85 if problem.name == "pr" else 1.0
                     values = values + np.float32(scale) * acc
                     changed = np.zeros(g.n, dtype=bool)

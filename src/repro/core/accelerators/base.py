@@ -43,39 +43,6 @@ class AccelConfig:
         return "all" in self.optimizations or opt in self.optimizations
 
 
-# ---- numpy semantic helpers -------------------------------------------------
-
-
-def edge_candidates_np(
-    problem: Problem,
-    src_vals: np.ndarray,
-    weights: np.ndarray | None,
-    src_deg: np.ndarray | None,
-) -> np.ndarray:
-    if problem.name == "bfs":
-        return src_vals + np.float32(1.0)
-    if problem.name == "wcc":
-        return src_vals
-    if problem.name == "sssp":
-        return src_vals + weights
-    if problem.name == "pr":
-        return src_vals / np.maximum(src_deg, 1.0).astype(np.float32)
-    if problem.name == "spmv":
-        w = weights if weights is not None else np.float32(1.0)
-        return src_vals * w
-    raise ValueError(problem.name)
-
-
-def accumulate_np(problem: Problem, cand: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
-    if problem.kind == "min":
-        acc = np.full(n, INF, dtype=np.float32)
-        np.minimum.at(acc, dst, cand)
-    else:
-        acc = np.zeros(n, dtype=np.float32)
-        np.add.at(acc, dst, cand)
-    return acc
-
-
 @dataclasses.dataclass
 class PhasedTrace:
     """Traces organised as [phase][channel]; phases are barriers (an

@@ -27,8 +27,6 @@ import numpy as np
 from repro.core.accelerators.base import (
     Accelerator,
     PhasedTrace,
-    accumulate_np,
-    edge_candidates_np,
 )
 from repro.core.memory_layout import MemoryLayout
 from repro.core.metrics import IterationStats
@@ -129,8 +127,8 @@ class ForeGraph(Accelerator):
                         # --- semantics (immediate across shards) ---
                         sv = (snapshot if problem.kind == "acc" else values)[src]
                         if problem.kind == "min":
-                            cand = edge_candidates_np(problem, sv, None, None)
-                            acc = accumulate_np(problem, cand, dst, g.n)
+                            cand = problem.edge_candidates_np(sv)
+                            acc = problem.accumulate_np(cand, dst, g.n)
                             new = np.minimum(values, acc)
                             changed = (new < values).nonzero()[0]
                             values = new
@@ -138,11 +136,11 @@ class ForeGraph(Accelerator):
                                 any_change = True
                                 dirty[np.unique(changed // interval)] = True
                         else:
-                            cand = edge_candidates_np(
-                                problem, sv, None,
+                            cand = problem.edge_candidates_np(
+                                sv, None,
                                 src_deg[src] if src_deg is not None else None,
                             )
-                            acc = accumulate_np(problem, cand, dst, g.n)
+                            acc = problem.accumulate_np(cand, dst, g.n)
                             scale = 0.85 if problem.name == "pr" else 1.0
                             values = values + np.float32(scale) * acc
 

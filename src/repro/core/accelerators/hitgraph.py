@@ -31,8 +31,6 @@ from repro.core.accelerators.base import (
     Accelerator,
     INF,
     PhasedTrace,
-    accumulate_np,
-    edge_candidates_np,
 )
 from repro.core.memory_layout import MemoryLayout
 from repro.core.metrics import IterationStats
@@ -117,8 +115,9 @@ class HitGraph(Accelerator):
                 else:
                     src_k, dst_k, w_k = src, dst, w
 
-                cand = edge_candidates_np(problem, values[src_k], w_k,
-                                          src_deg[src_k] if src_deg is not None else None)
+                cand = problem.edge_candidates_np(
+                    values[src_k], w_k,
+                    src_deg[src_k] if src_deg is not None else None)
                 # route updates to destination partitions
                 if len(dst_k):
                     jkey = dst_k // cfg.interval_size

@@ -28,7 +28,6 @@ from repro.core.accelerators.base import (
     Accelerator,
     INF,
     PhasedTrace,
-    edge_candidates_np,
 )
 from repro.core.memory_layout import MemoryLayout
 from repro.core.metrics import IterationStats
@@ -110,8 +109,8 @@ class ThunderGP(Accelerator):
                     w = g.weights[idx] if (g.weighted and problem.needs_weights) else None
 
                     # semantics: chunk partial accumulation over dst interval
-                    cand = edge_candidates_np(
-                        problem, values[src], w,
+                    cand = problem.edge_candidates_np(
+                        values[src], w,
                         src_deg[src] if src_deg is not None else None,
                     )
                     if problem.kind == "min":

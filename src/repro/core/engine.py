@@ -36,6 +36,12 @@ import numpy as np
 from repro.core.dram import DRAMConfig
 from repro.core.trace import Trace
 
+# Version tag of the simulation semantics (accelerator models + DRAM timing
+# engines).  Bump whenever a change alters simulation *results*; the sweep
+# result cache (repro.sweep.cache) keys on it, so stale cached reports are
+# invalidated automatically.
+ENGINE_VERSION = "1"
+
 
 @dataclasses.dataclass
 class TimingReport:
@@ -54,6 +60,14 @@ class TimingReport:
     @staticmethod
     def zero() -> "TimingReport":
         return TimingReport(0.0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0.0)
+
+    def to_dict(self) -> dict:
+        """Plain-scalar dict (JSON round-trip via ``from_dict``)."""
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "TimingReport":
+        return TimingReport(**d)
 
 
 def decode(lines: np.ndarray, cfg: DRAMConfig) -> tuple[np.ndarray, np.ndarray]:
@@ -145,8 +159,6 @@ def classify_fast(bank: np.ndarray, row: np.ndarray, nbanks: int) -> np.ndarray:
         return np.zeros(0, dtype=np.int8)
     order = np.argsort(bank, kind="stable")
     sb, sr = bank[order], row[order]
-    prev_same = np.empty(n, dtype=np.int64)
-    prev_same[0] = -1
     same_bank = sb[1:] == sb[:-1]
     cls_sorted = np.full(n, 1, dtype=np.int8)  # first touch of a bank: miss
     hit = np.zeros(n, dtype=bool)

@@ -24,6 +24,13 @@ class IterationStats:
     partitions_skipped: int = 0
     partitions_total: int = 0
 
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "IterationStats":
+        return IterationStats(**d)
+
 
 @dataclasses.dataclass
 class SimReport:
@@ -70,6 +77,45 @@ class SimReport:
     @property
     def values_read_per_iteration(self) -> float:
         return self.values_read_total / max(self.iterations, 1)
+
+    def to_dict(self, include_values: bool = False) -> dict:
+        """JSON-serialisable dict; round-trips via ``from_dict``.
+
+        ``values`` (the final vertex array) is excluded by default — it is
+        O(n) and only needed for semantic validation, not for performance
+        reporting or the sweep result cache."""
+        return dict(
+            accelerator=self.accelerator,
+            graph=self.graph,
+            problem=self.problem,
+            dram=self.dram,
+            n=self.n,
+            m=self.m,
+            timing=self.timing.to_dict(),
+            iterations=self.iterations,
+            per_iteration=[s.to_dict() for s in self.per_iteration],
+            values=(
+                np.asarray(self.values).tolist()
+                if include_values and self.values is not None
+                else None
+            ),
+        )
+
+    @staticmethod
+    def from_dict(d: dict) -> "SimReport":
+        values = d.get("values")
+        return SimReport(
+            accelerator=d["accelerator"],
+            graph=d["graph"],
+            problem=d["problem"],
+            dram=d["dram"],
+            n=d["n"],
+            m=d["m"],
+            timing=TimingReport.from_dict(d["timing"]),
+            iterations=d["iterations"],
+            per_iteration=[IterationStats.from_dict(s) for s in d["per_iteration"]],
+            values=np.asarray(values, dtype=np.float32) if values is not None else None,
+        )
 
     def row(self) -> dict:
         return dict(

@@ -186,12 +186,19 @@ class GraphSpec:
     """Recipe for one entry of the scaled paper suite (Tab. 2 analogue)."""
 
     name: str
-    kind: str  # rmat | uniform | road | smallworld | preferential
+    kind: str  # rmat | uniform | road | smallworld | preferential | community
     n: int
     target_m: int
     directed: bool
     seed: int
     root: int  # BFS/SSSP root (paper specifies roots per graph)
+
+    def canonical(self) -> dict:
+        """Canonical identity of the generated graph: every field that
+        determines the edge list, in declaration order.  Generators are
+        seeded, so equal ``canonical()`` dicts mean byte-identical graphs —
+        this is the graph component of the sweep cache key."""
+        return dataclasses.asdict(self)
 
     def build(self) -> Graph:
         if self.kind == "community":

@@ -73,6 +73,37 @@ class Problem:
             return src_vals * w
         raise ValueError(self.name)
 
+    def edge_candidates_np(
+        self,
+        src_vals: np.ndarray,
+        weights: np.ndarray | None = None,
+        src_deg: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """numpy twin of ``edge_candidates`` for the host-side accelerator
+        models (trace generation runs in numpy, the oracle in JAX)."""
+        if self.name == "bfs":
+            return src_vals + np.float32(1.0)
+        if self.name == "wcc":
+            return src_vals
+        if self.name == "sssp":
+            return src_vals + weights
+        if self.name == "pr":
+            return src_vals / np.maximum(src_deg, 1.0).astype(np.float32)
+        if self.name == "spmv":
+            w = weights if weights is not None else np.float32(1.0)
+            return src_vals * w
+        raise ValueError(self.name)
+
+    def accumulate_np(self, cand: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+        """numpy twin of ``accumulate``: scatter-combine candidates by dst."""
+        if self.kind == "min":
+            acc = np.full(n, np.inf, dtype=np.float32)
+            np.minimum.at(acc, dst, cand)
+        else:
+            acc = np.zeros(n, dtype=np.float32)
+            np.add.at(acc, dst, cand)
+        return acc
+
     def combine(self, acc: jnp.ndarray, old: jnp.ndarray, n: int) -> jnp.ndarray:
         """Combine accumulated contributions with the previous values."""
         if self.kind == "min":

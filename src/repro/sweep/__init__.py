@@ -1,0 +1,46 @@
+"""repro.sweep — declarative scenario sweeps with content-addressed caching
+and parallel execution.
+
+The paper's contribution is a simulation environment that makes graph
+accelerators *comparable* by sweeping performance dimensions; this package
+is the sweep engine on top of the accelerator models:
+
+- :mod:`repro.sweep.spec` — ``SweepSpec`` axes -> typed ``Scenario`` records
+  (invalid combinations filtered, not crashed on),
+- :mod:`repro.sweep.cache` — content-addressed on-disk result store keyed by
+  scenario hash (graph recipe + configs + engine version),
+- :mod:`repro.sweep.runner` — cache-aware serial/parallel executor with
+  per-scenario failure isolation and resume-after-interrupt,
+- :mod:`repro.sweep.results` — deterministic row aggregation, CSV/JSON
+  export, rank/Spearman validation helpers.
+
+CLI: ``python -m repro.sweep --accels accugraph,hitgraph --graphs sd --problems bfs``
+"""
+from repro.sweep.cache import ResultCache, scenario_hash, scenario_key
+from repro.sweep.results import rank, result_rows, spearman, write_csv, write_json
+from repro.sweep.runner import (
+    ScenarioResult,
+    SweepResult,
+    execute_scenario,
+    run_sweep,
+)
+from repro.sweep.spec import ConfigOverride, Scenario, Skipped, SweepSpec
+
+__all__ = [
+    "ConfigOverride",
+    "ResultCache",
+    "Scenario",
+    "ScenarioResult",
+    "Skipped",
+    "SweepResult",
+    "SweepSpec",
+    "execute_scenario",
+    "rank",
+    "result_rows",
+    "run_sweep",
+    "scenario_hash",
+    "scenario_key",
+    "spearman",
+    "write_csv",
+    "write_json",
+]

@@ -1,0 +1,103 @@
+"""CLI for ad-hoc scenario sweeps.
+
+    PYTHONPATH=src python -m repro.sweep \
+        --accels accugraph,foregraph,hitgraph,thundergp \
+        --graphs sd,db --problems bfs,pr --drams default,hbm \
+        --workers 4 --cache results/sweep_cache --out results/sweep
+
+``--channels`` crosses each DRAM preset with explicit channel counts (the
+Tab. 7 axis); ``--list`` prints the expanded scenarios (and what was
+filtered out) without simulating anything.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.accelerators import ACCELERATORS
+from repro.graph.generators import PAPER_GRAPHS
+from repro.graph.problems import PROBLEMS
+from repro.sweep.results import result_rows, write_csv, write_json
+from repro.sweep.runner import run_sweep
+from repro.sweep.spec import ConfigOverride, SweepSpec
+
+
+def _csv_list(text: str) -> tuple[str, ...]:
+    return tuple(x for x in text.split(",") if x)
+
+
+def build_spec(args: argparse.Namespace) -> SweepSpec:
+    drams: tuple = _csv_list(args.drams)
+    if args.channels:
+        chans = [int(c) for c in _csv_list(args.channels)]
+        drams = tuple((d, c) for d in drams for c in chans)
+    overrides: tuple = (ConfigOverride(engine=args.engine) if args.engine
+                        else ConfigOverride(),)
+    return SweepSpec(
+        name=args.name,
+        accelerators=_csv_list(args.accels),
+        graphs=_csv_list(args.graphs),
+        problems=_csv_list(args.problems),
+        drams=drams,
+        overrides=overrides,
+    )
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sweep", description=__doc__)
+    ap.add_argument("--name", default="sweep", help="sweep name (output file stem)")
+    ap.add_argument("--accels", default=",".join(ACCELERATORS),
+                    help=f"comma list from: {','.join(ACCELERATORS)}")
+    ap.add_argument("--graphs", default="sd,db",
+                    help=f"comma list from: {','.join(PAPER_GRAPHS)}")
+    ap.add_argument("--problems", default="bfs",
+                    help=f"comma list from: {','.join(PROBLEMS)}")
+    ap.add_argument("--drams", default="default",
+                    help="DRAM presets (default,ddr3,hbm,...)")
+    ap.add_argument("--channels", default="",
+                    help="optional channel counts crossed with --drams (e.g. 1,2,4)")
+    ap.add_argument("--engine", default="", help="DRAM engine override (scan|fast)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="process-pool size; <=1 runs serially")
+    ap.add_argument("--cache", default="results/sweep_cache",
+                    help="result cache directory ('' disables caching)")
+    ap.add_argument("--out", default="results/sweep", help="output directory")
+    ap.add_argument("--list", action="store_true",
+                    help="print expanded scenarios and exit")
+    args = ap.parse_args(argv)
+
+    spec = build_spec(args)
+    try:
+        spec.expand()
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if args.list:
+        scenarios, skipped = spec.expand()
+        for s in scenarios:
+            print(f"run  {s.scenario_id}")
+        for sk in skipped:
+            print(f"skip {sk.graph}/{sk.accelerator}/{sk.problem}/{sk.dram}: {sk.reason}")
+        print(f"{len(scenarios)} scenarios, {len(skipped)} skipped")
+        return 0
+
+    result = run_sweep(
+        spec,
+        cache_dir=args.cache or None,
+        workers=args.workers,
+        progress=lambda msg: print(msg, flush=True),
+    )
+    rows = result_rows(result, with_status=True)
+    if rows:
+        csv_path = f"{args.out}/{spec.name}.csv"
+        write_csv(csv_path, rows)
+        write_json(f"{args.out}/{spec.name}.json", rows)
+        print(f"wrote {csv_path} ({len(rows)} rows)")
+    else:
+        print("no runnable scenarios (all combinations filtered); nothing written")
+    print(result.summary())
+    return 1 if result.n_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,95 @@
+"""Content-addressed on-disk result store for sweep scenarios.
+
+The cache key is a SHA-256 over the *canonical* JSON of everything that
+determines a scenario's simulation result: the graph recipe
+(``GraphSpec.canonical()`` — generators are seeded, so the recipe pins the
+edge list), the resolved accelerator config, the resolved DRAM config, the
+problem and root, and ``ENGINE_VERSION``.  Changing any of these — including
+bumping the engine version after a semantics change — moves the scenario to
+a new address, so stale results are never served.
+
+Records are one JSON file per hash, written atomically (tmp + ``os.replace``)
+so parallel workers and interrupted sweeps cannot leave torn records; a
+re-run of an interrupted sweep simply re-executes the missing hashes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+
+from repro.core.engine import ENGINE_VERSION
+from repro.sweep.spec import Scenario
+
+
+def canonical_json(obj) -> str:
+    """Deterministic JSON: sorted keys, no whitespace."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def scenario_key(s: Scenario) -> dict:
+    """The full identity dict hashed into the cache address."""
+    return dict(
+        engine_version=ENGINE_VERSION,
+        graph=s.graph.canonical(),
+        accelerator=s.accelerator,
+        problem=s.problem,
+        root=s.root,
+        dram=dataclasses.asdict(s.dram),
+        config=dict(
+            interval_size=s.config.interval_size,
+            n_pes=s.config.n_pes,
+            optimizations=sorted(s.config.optimizations),
+            engine=s.config.engine,
+            max_iters=s.config.max_iters,
+            scan_cutoff=s.config.scan_cutoff,
+        ),
+    )
+
+
+def scenario_hash(s: Scenario) -> str:
+    return hashlib.sha256(canonical_json(scenario_key(s)).encode()).hexdigest()
+
+
+class ResultCache:
+    """Filesystem-backed content-addressed store; ``root=None`` disables it
+    (every scenario executes)."""
+
+    def __init__(self, root: str | None):
+        self.root = root
+
+    @property
+    def enabled(self) -> bool:
+        return self.root is not None
+
+    def path(self, h: str) -> str:
+        return os.path.join(self.root, h[:2], h + ".json")
+
+    def get(self, h: str) -> dict | None:
+        if not self.enabled:
+            return None
+        try:
+            with open(self.path(h)) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def put(self, h: str, record: dict) -> None:
+        if not self.enabled:
+            return
+        path = self.path(h)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(record, f)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def __contains__(self, h: str) -> bool:
+        return self.enabled and os.path.exists(self.path(h))

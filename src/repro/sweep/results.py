@@ -1,0 +1,112 @@
+"""Aggregation of sweep results into flat row dicts + CSV/JSON export.
+
+Rows are deterministic functions of the simulation results (no wall-clock,
+no cache status), so a cached re-run, a serial run and a parallel run of the
+same spec all yield byte-identical exports.  The rank / Spearman helpers the
+paper-validation benches use live here as well.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+
+import numpy as np
+
+from repro.sweep.runner import SweepResult
+
+
+def result_rows(
+    result: SweepResult,
+    include_errors: bool = True,
+    with_status: bool = False,
+) -> list[dict]:
+    """One flat dict per scenario, in spec expansion order.
+
+    ``with_status`` adds the ok/cached/error column (useful interactively;
+    off by default so cached re-runs export identical bytes)."""
+    rows = []
+    for r in result.results:
+        s = r.scenario
+        row = dict(
+            graph=s.graph.name,
+            accelerator=s.accelerator,
+            problem=s.problem,
+            dram=s.dram.name,
+            channels=s.dram.channels,
+            label=s.label,
+        )
+        if with_status:
+            row["status"] = r.status
+        rep = r.report
+        if rep is not None:
+            gs = r.record.get("graph_stats", {})
+            row.update(
+                n=rep.n,
+                m=rep.m,
+                runtime_s=rep.runtime_s,
+                mteps=rep.mteps,
+                mreps=rep.mreps,
+                iterations=rep.iterations,
+                bytes_per_edge=rep.bytes_per_edge,
+                values_read_per_iteration=rep.values_read_per_iteration,
+                edges_read_per_iteration=rep.edges_read_per_iteration,
+                row_hits=rep.timing.hits,
+                row_misses=rep.timing.misses,
+                row_conflicts=rep.timing.conflicts,
+                bw_utilization=rep.timing.bw_utilization,
+                avg_degree=gs.get("avg_degree"),
+                degree_skewness=gs.get("degree_skewness"),
+            )
+        elif include_errors:
+            err = (r.record.get("error") or "").strip()
+            row["error"] = err.splitlines()[-1] if err else "unknown error"
+        else:
+            continue
+        rows.append(row)
+    return rows
+
+
+def write_csv(path: str, rows: list[dict]) -> None:
+    """Write rows with the union of all keys (error rows lack metric
+    columns); missing cells are left empty."""
+    if not rows:
+        return
+    if os.path.dirname(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+    keys: list[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys, restval="")
+        w.writeheader()
+        w.writerows(rows)
+
+
+def write_json(path: str, rows: list[dict]) -> None:
+    if os.path.dirname(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+# ---- validation helpers (paper rank-agreement checks) ----------------------
+
+
+def rank(values: dict) -> list:
+    """Keys ordered by ascending value (runtime ranking)."""
+    return sorted(values, key=lambda k: values[k])
+
+
+def spearman(a: list, b: list) -> float:
+    """Spearman rank correlation of two orderings of the same key set."""
+    ra = {k: i for i, k in enumerate(a)}
+    rb = {k: i for i, k in enumerate(b)}
+    keys = list(ra)
+    x = np.array([ra[k] for k in keys], float)
+    y = np.array([rb[k] for k in keys], float)
+    if x.std() == 0 or y.std() == 0:
+        return 1.0
+    return float(np.corrcoef(x, y)[0, 1])

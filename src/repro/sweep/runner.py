@@ -1,0 +1,194 @@
+"""Sweep executor: cache short-circuit, parallel workers, failure isolation.
+
+Execution pipeline per :class:`SweepSpec`:
+
+1. expand the spec into scenarios (+ invalid combinations, pre-filtered),
+2. look every scenario up in the content-addressed cache — hits are
+   returned without simulating anything,
+3. execute the misses, serially or on a ``ProcessPoolExecutor`` (spawn
+   context: JAX does not survive forks), deduplicating identical scenarios,
+4. record each execution in the cache (errors are *not* cached, so a fixed
+   bug re-runs its scenarios on the next sweep).
+
+One failing scenario becomes an ``error`` row with its traceback; the sweep
+continues.  Result order is the spec's expansion order, independent of
+completion order, so ``--workers N`` yields byte-identical result rows to a
+serial run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import time
+import traceback
+from concurrent.futures import ProcessPoolExecutor, as_completed
+from typing import Callable
+
+from repro.core.metrics import SimReport
+from repro.graph.generators import GraphSpec
+from repro.graph.problems import PROBLEMS
+from repro.graph.structure import Graph
+from repro.sweep.cache import ResultCache, scenario_hash
+from repro.sweep.spec import Scenario, Skipped, SweepSpec
+
+# Per-process graph memo: workers (and serial runs) build each GraphSpec
+# once even when it appears in many scenarios.
+_GRAPHS: dict[GraphSpec, Graph] = {}
+
+
+def _graph(spec: GraphSpec) -> Graph:
+    g = _GRAPHS.get(spec)
+    if g is None:
+        g = _GRAPHS[spec] = spec.build()
+    return g
+
+
+def execute_scenario(scenario: Scenario) -> dict:
+    """Run one scenario to a plain-dict record.  Never raises: failures are
+    isolated into ``{"status": "error"}`` records."""
+    from repro.core.accelerators.base import run_accelerator
+
+    t0 = time.time()
+    try:
+        g = _graph(scenario.graph)
+        rep = run_accelerator(
+            scenario.accelerator,
+            g,
+            PROBLEMS[scenario.problem],
+            root=scenario.root,
+            dram=scenario.dram,
+            config=scenario.config,
+        )
+        return dict(
+            status="ok",
+            report=rep.to_dict(),
+            graph_stats=dict(
+                n=g.n,
+                m=g.m,
+                avg_degree=g.avg_degree,
+                degree_skewness=g.degree_skewness,
+            ),
+            wall_s=round(time.time() - t0, 3),
+        )
+    except Exception:
+        return dict(
+            status="error",
+            error=traceback.format_exc(),
+            wall_s=round(time.time() - t0, 3),
+        )
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """One scenario's outcome: ``ok`` (executed), ``cached`` (served from the
+    store), or ``error`` (isolated failure; ``record['error']`` holds the
+    traceback)."""
+
+    scenario: Scenario
+    hash: str
+    status: str  # ok | cached | error
+    record: dict
+
+    @property
+    def report(self) -> SimReport | None:
+        if self.status in ("ok", "cached"):
+            return SimReport.from_dict(self.record["report"])
+        return None
+
+
+@dataclasses.dataclass
+class SweepResult:
+    name: str
+    results: list[ScenarioResult]
+    skipped: list[Skipped]
+
+    @property
+    def n_cached(self) -> int:
+        return sum(r.status == "cached" for r in self.results)
+
+    @property
+    def n_executed(self) -> int:
+        return sum(r.status in ("ok", "error") for r in self.results)
+
+    @property
+    def n_errors(self) -> int:
+        return sum(r.status == "error" for r in self.results)
+
+    @property
+    def all_cached(self) -> bool:
+        """True iff the whole sweep was served from the cache (zero DRAM
+        simulations ran)."""
+        return bool(self.results) and self.n_executed == 0
+
+    def summary(self) -> str:
+        return (
+            f"{self.name}: {len(self.results)} scenarios "
+            f"({self.n_cached} cached, {self.n_executed} executed, "
+            f"{self.n_errors} errors, {len(self.skipped)} skipped)"
+        )
+
+
+def run_sweep(
+    spec: SweepSpec,
+    cache_dir: str | None = None,
+    workers: int = 0,
+    progress: Callable[[str], None] | None = None,
+) -> SweepResult:
+    """Execute a sweep spec.  ``workers <= 1`` runs serially in-process;
+    ``workers > 1`` fans scenarios out to a spawn-context process pool."""
+    say = progress or (lambda msg: None)
+    scenarios, skipped = spec.expand()
+    for sk in skipped:
+        say(f"[{spec.name}] skip {sk.graph}/{sk.accelerator}/{sk.problem}: {sk.reason}")
+    cache = ResultCache(cache_dir)
+    hashes = [scenario_hash(s) for s in scenarios]
+
+    results: list[ScenarioResult | None] = [None] * len(scenarios)
+    pending_by_hash: dict[str, list[int]] = {}
+    for i, (s, h) in enumerate(zip(scenarios, hashes)):
+        rec = cache.get(h)
+        if rec is not None and rec.get("status") == "ok":
+            results[i] = ScenarioResult(s, h, "cached", rec)
+        else:
+            pending_by_hash.setdefault(h, []).append(i)
+
+    total = len(scenarios)
+    done = total - sum(len(v) for v in pending_by_hash.values())
+    if done:
+        say(f"[{spec.name}] {done}/{total} served from cache")
+
+    def finish(h: str, record: dict) -> None:
+        nonlocal done
+        if record["status"] == "ok":
+            cache.put(h, record)
+        for i in pending_by_hash[h]:
+            s = scenarios[i]
+            results[i] = ScenarioResult(s, h, record["status"], record)
+            done += 1
+            mark = "ok" if record["status"] == "ok" else "ERROR"
+            say(f"[{spec.name}] {done}/{total} {mark} {s.scenario_id} "
+                f"({record.get('wall_s', 0):.2f}s)")
+
+    unique_pending = list(pending_by_hash)
+    if workers > 1 and len(unique_pending) > 1:
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
+            futures = {
+                pool.submit(execute_scenario, scenarios[pending_by_hash[h][0]]): h
+                for h in unique_pending
+            }
+            for fut in as_completed(futures):
+                h = futures[fut]
+                try:
+                    record = fut.result()
+                except Exception:  # pool-level failure (e.g. broken process)
+                    record = dict(status="error", error=traceback.format_exc(),
+                                  wall_s=0.0)
+                finish(h, record)
+    else:
+        for h in unique_pending:
+            finish(h, execute_scenario(scenarios[pending_by_hash[h][0]]))
+
+    out = SweepResult(spec.name, [r for r in results if r is not None], skipped)
+    say(f"[{spec.name}] {out.summary()}")
+    return out

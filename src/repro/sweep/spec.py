@@ -1,0 +1,181 @@
+"""Declarative scenario sweeps over the simulation environment's axes.
+
+A :class:`SweepSpec` names the performance dimensions the paper sweeps —
+accelerator x problem x graph x memory technology x configuration — and
+``expand()`` resolves the cross-product into fully-typed :class:`Scenario`
+records.  Invalid combinations (a weighted problem on an accelerator without
+weight support, multi-channel DRAM on a single-channel design, an interval
+size the model rejects) are filtered into :class:`Skipped` records instead of
+crashing mid-sweep.
+
+Scenarios are frozen, hashable and picklable: they are the unit of work of
+``repro.sweep.runner`` and the input of the content-addressed result cache
+(``repro.sweep.cache``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.graphsim import default_config
+from repro.core.accelerators import ACCELERATORS
+from repro.core.accelerators.base import AccelConfig
+from repro.core.dram import DRAM_CONFIGS, DRAMConfig, dram_config
+from repro.graph.generators import PAPER_GRAPHS, GraphSpec
+from repro.graph.problems import PROBLEMS
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigOverride:
+    """One point of a configuration axis (e.g. an ablation): the fields set
+    here replace the accelerator's default :class:`AccelConfig` fields."""
+
+    label: str = ""
+    interval_size: int | None = None
+    n_pes: int | None = None
+    optimizations: frozenset | None = None
+    engine: str | None = None
+
+    def apply(self, cfg: AccelConfig) -> AccelConfig:
+        kw = {
+            f: getattr(self, f)
+            for f in ("interval_size", "n_pes", "optimizations", "engine")
+            if getattr(self, f) is not None
+        }
+        return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One fully-resolved simulation point: everything ``run_accelerator``
+    needs, with no late binding — hashable, picklable, cacheable."""
+
+    graph: GraphSpec
+    accelerator: str
+    problem: str
+    dram: DRAMConfig
+    config: AccelConfig
+    root: int = 0
+    label: str = ""  # ConfigOverride label (e.g. ablation name)
+
+    @property
+    def scenario_id(self) -> str:
+        """Human-readable identity for progress lines and error reports."""
+        parts = [self.graph.name, self.accelerator, self.problem,
+                 f"{self.dram.name}x{self.dram.channels}"]
+        if self.label:
+            parts.append(self.label)
+        return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Skipped:
+    """An invalid axis combination, recorded instead of executed."""
+
+    graph: str
+    accelerator: str
+    problem: str
+    dram: str
+    label: str
+    reason: str
+
+
+def _as_graph_spec(g: str | GraphSpec) -> GraphSpec:
+    return PAPER_GRAPHS[g] if isinstance(g, str) else g
+
+
+def _as_dram_axis(d) -> tuple[str, int | None]:
+    return d if isinstance(d, tuple) else (d, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Cross-product sweep definition.
+
+    Axes:
+      accelerators: model names from ``ACCELERATORS``.
+      graphs: ``PAPER_GRAPHS`` keys or inline :class:`GraphSpec` recipes.
+      problems: ``PROBLEMS`` keys.
+      drams: DRAM preset names, or ``(name, channels)`` pairs; an explicit
+        channel count also sets ``n_pes`` on accelerators that pair PEs with
+        memory channels (HitGraph, ThunderGP — the paper's Tab. 7 setup).
+      overrides: :class:`ConfigOverride` axis (ablations, interval sizes...).
+
+    Expansion order is graphs, accelerators, problems, drams, overrides —
+    stable, so result rows are deterministic regardless of execution order.
+    """
+
+    name: str
+    accelerators: tuple[str, ...]
+    graphs: tuple[str | GraphSpec, ...]
+    problems: tuple[str, ...] = ("bfs",)
+    drams: tuple[str | tuple[str, int | None], ...] = ("default",)
+    overrides: tuple[ConfigOverride, ...] = (ConfigOverride(),)
+
+    def _validate(self) -> None:
+        """Clean errors for unknown axis names (instead of a KeyError deep
+        in the expansion)."""
+        def check(kind, names, known):
+            unknown = sorted(set(names) - set(known))
+            if unknown:
+                raise ValueError(
+                    f"unknown {kind} {', '.join(map(repr, unknown))}; "
+                    f"available: {', '.join(known)}"
+                )
+
+        check("accelerator(s)", self.accelerators, ACCELERATORS)
+        check("problem(s)", self.problems, PROBLEMS)
+        check("graph(s)", [g for g in self.graphs if isinstance(g, str)], PAPER_GRAPHS)
+        check("DRAM preset(s)", [_as_dram_axis(d)[0] for d in self.drams], DRAM_CONFIGS)
+        bad = [c for _, c in map(_as_dram_axis, self.drams)
+               if c is not None and c < 1]
+        if bad:
+            raise ValueError(f"channel counts must be >= 1, got {bad}")
+
+    def expand(self) -> tuple[list[Scenario], list[Skipped]]:
+        self._validate()
+        scenarios: list[Scenario] = []
+        skipped: list[Skipped] = []
+        for graph in self.graphs:
+            gspec = _as_graph_spec(graph)
+            for accel in self.accelerators:
+                cls = ACCELERATORS[accel]
+                for prob in self.problems:
+                    problem = PROBLEMS[prob]
+                    for dram_axis in self.drams:
+                        dname, channels = _as_dram_axis(dram_axis)
+                        for ov in self.overrides:
+                            def skip(reason: str):
+                                skipped.append(Skipped(
+                                    graph=gspec.name, accelerator=accel,
+                                    problem=prob, dram=dname,
+                                    label=ov.label, reason=reason,
+                                ))
+
+                            if problem.needs_weights and not cls.supports_weights:
+                                skip(f"{accel} does not support weighted problems")
+                                continue
+                            if channels and channels > 1 and not cls.supports_multichannel:
+                                skip(f"{accel} does not support multi-channel memory")
+                                continue
+                            cfg = default_config(accel)
+                            if channels and cls.supports_multichannel:
+                                cfg = dataclasses.replace(cfg, n_pes=channels)
+                            cfg = ov.apply(cfg)
+                            try:
+                                cls(cfg)  # model-side config validation
+                            except ValueError as e:
+                                skip(str(e))
+                                continue
+                            scenarios.append(Scenario(
+                                graph=gspec,
+                                accelerator=accel,
+                                problem=prob,
+                                dram=dram_config(dname, channels=channels),
+                                config=cfg,
+                                root=gspec.root,
+                                label=ov.label,
+                            ))
+        return scenarios, skipped
+
+    def scenarios(self) -> list[Scenario]:
+        return self.expand()[0]

@@ -1,6 +1,8 @@
 """Graph substrate tests: structures, generators, partitioning invariants."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.graph import (

@@ -1,5 +1,8 @@
 """Reference problem solvers vs plain-python oracles."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.graph import from_edges

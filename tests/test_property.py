@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dram import dram_config

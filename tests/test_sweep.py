@@ -1,0 +1,280 @@
+"""repro.sweep: spec expansion, content-addressed cache, runner, results."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.graphsim import default_config
+from repro.core.accelerators.base import run_accelerator
+from repro.core.dram import dram_config
+from repro.graph.generators import GraphSpec
+from repro.graph.problems import PROBLEMS
+from repro.sweep import (
+    ConfigOverride,
+    ResultCache,
+    SweepSpec,
+    execute_scenario,
+    result_rows,
+    run_sweep,
+    scenario_hash,
+    write_csv,
+)
+from repro.sweep import cache as cache_mod
+
+TINY = GraphSpec("tiny", "uniform", 256, 1024, True, 1, 0)
+TINY2 = GraphSpec("tiny2", "uniform", 200, 800, True, 2, 0)
+BROKEN = GraphSpec("broken", "no-such-generator", 64, 128, True, 1, 0)
+
+
+def tiny_spec(accels=("accugraph",), problems=("bfs",), graphs=(TINY,), **kw):
+    return SweepSpec(name="t", accelerators=tuple(accels), graphs=tuple(graphs),
+                     problems=tuple(problems), **kw)
+
+
+# ---- spec expansion / invalid-combination filtering ------------------------
+
+
+def test_expand_cross_product_order():
+    spec = tiny_spec(accels=("accugraph", "hitgraph"), problems=("bfs", "pr"),
+                     graphs=(TINY, TINY2))
+    scenarios, skipped = spec.expand()
+    assert not skipped
+    ids = [(s.graph.name, s.accelerator, s.problem) for s in scenarios]
+    assert ids == [
+        ("tiny", "accugraph", "bfs"), ("tiny", "accugraph", "pr"),
+        ("tiny", "hitgraph", "bfs"), ("tiny", "hitgraph", "pr"),
+        ("tiny2", "accugraph", "bfs"), ("tiny2", "accugraph", "pr"),
+        ("tiny2", "hitgraph", "bfs"), ("tiny2", "hitgraph", "pr"),
+    ]
+
+
+def test_expand_filters_weighted_on_unsupported():
+    spec = tiny_spec(accels=("accugraph", "foregraph", "hitgraph", "thundergp"),
+                     problems=("bfs", "sssp"))
+    scenarios, skipped = spec.expand()
+    ran = {(s.accelerator, s.problem) for s in scenarios}
+    assert ("hitgraph", "sssp") in ran and ("thundergp", "sssp") in ran
+    assert ("accugraph", "sssp") not in ran and ("foregraph", "sssp") not in ran
+    reasons = {(sk.accelerator, sk.problem): sk.reason for sk in skipped}
+    assert "weighted" in reasons[("accugraph", "sssp")]
+
+
+def test_expand_filters_multichannel_on_single_channel_accel():
+    spec = tiny_spec(accels=("accugraph", "hitgraph"),
+                     drams=(("default", 1), ("default", 4)))
+    scenarios, skipped = spec.expand()
+    assert {(s.accelerator, s.dram.channels) for s in scenarios} == {
+        ("accugraph", 1), ("hitgraph", 1), ("hitgraph", 4)}
+    # the explicit channel axis also pairs PEs with channels (Tab. 7 setup)
+    assert {s.config.n_pes for s in scenarios if s.accelerator == "hitgraph"} == {1, 4}
+    assert any(sk.accelerator == "accugraph" and "multi-channel" in sk.reason
+               for sk in skipped)
+
+
+def test_expand_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown accelerator.*'bogus'"):
+        tiny_spec(accels=("bogus",)).expand()
+    with pytest.raises(ValueError, match="unknown DRAM preset"):
+        tiny_spec(drams=("nodram",)).expand()
+    with pytest.raises(ValueError, match="unknown graph"):
+        tiny_spec(graphs=("nograph",)).expand()
+    with pytest.raises(ValueError, match="channel counts"):
+        tiny_spec(drams=(("default", 0),)).expand()
+
+
+def test_expand_filters_model_rejected_config():
+    spec = tiny_spec(accels=("foregraph",),
+                     overrides=(ConfigOverride(label="huge", interval_size=1 << 20),))
+    scenarios, skipped = spec.expand()
+    assert not scenarios
+    assert "65,536" in skipped[0].reason
+
+
+# ---- scenario hashing / cache ----------------------------------------------
+
+
+def test_scenario_hash_stable_and_sensitive():
+    base = tiny_spec().scenarios()[0]
+    again = tiny_spec().scenarios()[0]
+    assert scenario_hash(base) == scenario_hash(again)
+
+    other_cfg = dataclasses.replace(base, config=dataclasses.replace(
+        base.config, interval_size=512))
+    other_dram = dataclasses.replace(base, dram=dram_config("hbm"))
+    other_graph = dataclasses.replace(base, graph=dataclasses.replace(TINY, seed=9))
+    hashes = {scenario_hash(s) for s in (base, other_cfg, other_dram, other_graph)}
+    assert len(hashes) == 4
+
+    # the override label is presentation-only: not part of the identity
+    labelled = dataclasses.replace(base, label="ablation-x")
+    assert scenario_hash(labelled) == scenario_hash(base)
+
+
+def test_engine_version_invalidates_hash(monkeypatch):
+    s = tiny_spec().scenarios()[0]
+    h1 = scenario_hash(s)
+    monkeypatch.setattr(cache_mod, "ENGINE_VERSION", "test-bump")
+    assert scenario_hash(s) != h1
+
+
+def test_result_cache_roundtrip(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    assert cache.get("ab" * 32) is None
+    cache.put("ab" * 32, {"status": "ok", "x": 1})
+    assert cache.get("ab" * 32) == {"status": "ok", "x": 1}
+    assert ("ab" * 32) in cache
+    disabled = ResultCache(None)
+    disabled.put("cd" * 32, {"status": "ok"})
+    assert disabled.get("cd" * 32) is None
+
+
+def test_sim_report_serialization_roundtrip():
+    rec = execute_scenario(tiny_spec().scenarios()[0])
+    assert rec["status"] == "ok"
+    from repro.core.metrics import SimReport
+
+    rep = SimReport.from_dict(rec["report"])
+    assert rep.to_dict() == rec["report"]
+    assert rep.runtime_s > 0 and rep.iterations >= 1
+    assert len(rep.per_iteration) == rep.iterations
+
+
+# ---- runner ----------------------------------------------------------------
+
+
+def test_sweep_rows_match_direct_execution():
+    spec = tiny_spec(accels=("accugraph", "hitgraph"))
+    result = run_sweep(spec)
+    rows = result_rows(result)
+    assert len(rows) == 2
+    g = TINY.build()
+    for row in rows:
+        rep = run_accelerator(row["accelerator"], g, PROBLEMS["bfs"], root=TINY.root,
+                              dram=dram_config("default"),
+                              config=default_config(row["accelerator"]))
+        assert row["runtime_s"] == rep.runtime_s
+        assert row["mteps"] == rep.mteps
+        assert row["iterations"] == rep.iterations
+        assert row["bytes_per_edge"] == rep.bytes_per_edge
+
+
+def test_second_run_is_all_cache_hits(tmp_path):
+    spec = tiny_spec(accels=("accugraph", "foregraph"))
+    cache_dir = str(tmp_path / "cache")
+    first = run_sweep(spec, cache_dir=cache_dir)
+    assert first.n_executed == 2 and first.n_cached == 0
+    second = run_sweep(spec, cache_dir=cache_dir)
+    assert second.all_cached and second.n_executed == 0
+    assert result_rows(second) == result_rows(first)
+
+
+def test_cache_invalidation_on_config_change(tmp_path):
+    cache_dir = str(tmp_path / "cache")
+    run_sweep(tiny_spec(), cache_dir=cache_dir)
+    changed = tiny_spec(overrides=(ConfigOverride(interval_size=512),))
+    result = run_sweep(changed, cache_dir=cache_dir)
+    assert result.n_executed == 1 and result.n_cached == 0
+
+
+def test_resume_after_interrupt(tmp_path):
+    """A pre-populated cache short-circuits the already-done scenarios."""
+    cache_dir = str(tmp_path / "cache")
+    run_sweep(tiny_spec(accels=("accugraph",)), cache_dir=cache_dir)
+    resumed = run_sweep(tiny_spec(accels=("accugraph", "foregraph", "thundergp")),
+                        cache_dir=cache_dir)
+    assert resumed.n_cached == 1 and resumed.n_executed == 2
+    statuses = {r.scenario.accelerator: r.status for r in resumed.results}
+    assert statuses == {"accugraph": "cached", "foregraph": "ok", "thundergp": "ok"}
+
+
+def test_error_isolation_and_errors_not_cached(tmp_path):
+    spec = tiny_spec(graphs=(BROKEN, TINY))
+    cache_dir = str(tmp_path / "cache")
+    result = run_sweep(spec, cache_dir=cache_dir)
+    assert result.n_errors == 1 and result.n_executed == 2
+    by_graph = {r.scenario.graph.name: r for r in result.results}
+    assert by_graph["broken"].status == "error"
+    assert "no-such-generator" in by_graph["broken"].record["error"]
+    assert by_graph["tiny"].status == "ok"
+    rows = result_rows(result)
+    assert "error" in rows[0] and rows[1]["runtime_s"] > 0
+    # errors are not cached: the broken scenario re-executes, the good one not
+    again = run_sweep(spec, cache_dir=cache_dir)
+    assert again.n_cached == 1 and again.n_errors == 1
+
+
+def test_duplicate_scenarios_execute_once(tmp_path):
+    # "all" optimizations override == the default config -> same hash
+    spec = tiny_spec(overrides=(ConfigOverride(),
+                                ConfigOverride(label="all",
+                                               optimizations=frozenset({"all"}))))
+    result = run_sweep(spec)
+    assert len(result.results) == 2
+    assert result.results[0].hash == result.results[1].hash
+    r0, r1 = result_rows(result)
+    assert r0["runtime_s"] == r1["runtime_s"]
+
+
+@pytest.mark.slow
+def test_parallel_matches_serial_byte_identical(tmp_path):
+    spec = tiny_spec(accels=("accugraph", "foregraph", "thundergp"),
+                     problems=("bfs", "pr"))
+    serial = run_sweep(spec, workers=0)
+    parallel = run_sweep(spec, workers=2)
+    assert result_rows(serial) == result_rows(parallel)
+    p_ser, p_par = str(tmp_path / "ser.csv"), str(tmp_path / "par.csv")
+    write_csv(p_ser, result_rows(serial))
+    write_csv(p_par, result_rows(parallel))
+    assert open(p_ser, "rb").read() == open(p_par, "rb").read()
+
+
+# ---- results / CLI ---------------------------------------------------------
+
+
+def test_write_csv_union_of_keys(tmp_path):
+    path = str(tmp_path / "x.csv")
+    write_csv(path, [dict(a=1, b=2), dict(a=3, error="boom")])
+    lines = open(path).read().splitlines()
+    assert lines[0] == "a,b,error"
+    assert lines[1] == "1,2,"
+    assert lines[2] == "3,,boom"
+
+
+def test_rank_spearman():
+    from repro.sweep import rank, spearman
+
+    assert rank({"a": 3.0, "b": 1.0, "c": 2.0}) == ["b", "c", "a"]
+    assert spearman(["a", "b", "c"], ["a", "b", "c"]) == pytest.approx(1.0)
+    assert spearman(["a", "b", "c"], ["c", "b", "a"]) == pytest.approx(-1.0)
+
+
+def test_cli_list(capsys):
+    from repro.sweep.__main__ import main
+
+    rc = main(["--accels", "accugraph,hitgraph", "--graphs", "sd",
+               "--problems", "bfs,sssp", "--list"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "run  sd/hitgraph/sssp" in out
+    assert "skip sd/accugraph/sssp" in out
+
+
+def test_cli_unknown_name_clean_error(tmp_path, capsys):
+    from repro.sweep.__main__ import main
+
+    rc = main(["--accels", "bogus", "--graphs", "sd", "--cache", "",
+               "--out", str(tmp_path)])
+    assert rc == 2
+    assert "unknown accelerator" in capsys.readouterr().err
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    from repro.sweep.__main__ import main
+
+    args = ["--accels", "accugraph", "--graphs", "sd", "--problems", "bfs",
+            "--cache", str(tmp_path / "cache"), "--out", str(tmp_path / "out")]
+    assert main(args) == 0
+    assert (tmp_path / "out" / "sweep.csv").exists()
+    capsys.readouterr()
+    assert main(args) == 0  # second run: all cached
+    assert "1 cached, 0 executed" in capsys.readouterr().out

@@ -1,6 +1,8 @@
 """Request-trace abstractions and DRAM engine tests."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dram import DRAM_CONFIGS, dram_config
