@@ -1,0 +1,147 @@
+"""Engine throughput bench: sequential vs batched DRAM timing dispatch.
+
+Builds a tab4-style sweep chunk (accelerators x graphs x problems on one
+DDR4 device), runs every scenario's *semantic* half once, then times the
+chunk's DRAM traces twice:
+
+- **sequential** — one jitted device dispatch + one blocking host sync per
+  trace (the pre-batching engine path, kept as ``batched=False``),
+- **batched** — ``repro.core.engine.simulate_many``: one vmapped dispatch
+  per (timing-config x length-bucket) group over the whole chunk.
+
+Both passes must produce identical ``TimingReport`` s (asserted on every
+run); wall time, traces/sec and the device dispatch counts are written to
+``BENCH_engine.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_engine                # tab4-sized
+    PYTHONPATH=src python -m benchmarks.bench_engine --tiny         # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.accelerators import ACCELERATORS
+from repro.core.engine import (
+    dispatch_stats,
+    reset_dispatch_stats,
+    simulate_many,
+    simulate_sequential,
+)
+from repro.graph.problems import PROBLEMS
+from repro.sweep.spec import SweepSpec
+
+
+def _prepare_chunk(spec: SweepSpec):
+    """Semantic halves of all scenarios -> flat (trace, cfg, engine,
+    cutoff) work items plus per-scenario slices."""
+    from repro.sweep.runner import _graph
+
+    items, slices = [], []
+    for s in spec.scenarios():
+        g = _graph(s.graph)
+        accel = ACCELERATORS[s.accelerator](s.config)
+        pending = accel.prepare(g, PROBLEMS[s.problem], root=s.root, dram=s.dram)
+        traces = pending.traces()
+        slices.append((pending, len(traces)))
+        items += [(tr, pending.dram, s.config.engine, s.config.scan_cutoff)
+                  for tr in traces]
+    return items, slices
+
+
+def _run_sequential(items):
+    # per-item so mixed configs stay per-trace dispatches (the pre-batching
+    # engine path); simulate_sequential is the same oracle per config
+    return [simulate_sequential([tr], cfg, engine, cutoff)[0]
+            for tr, cfg, engine, cutoff in items]
+
+
+def _timed(label: str, fn, items):
+    reset_dispatch_stats()
+    t0 = time.time()
+    reports = fn(items)
+    wall = time.time() - t0
+    stats = dispatch_stats()
+    rec = dict(
+        wall_s=round(wall, 4),
+        traces=len(items),
+        requests=sum(tr.n for tr, *_ in items),
+        device_dispatches=stats["dispatches"],
+        traces_per_s=round(len(items) / max(wall, 1e-9), 1),
+    )
+    print(f"  {label:>10}: {rec['wall_s']:.3f}s wall, "
+          f"{rec['device_dispatches']} dispatches, "
+          f"{rec['traces_per_s']} traces/s")
+    return reports, rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--graphs", default="sd,db",
+                    help="graph suite keys for the tab4-style chunk")
+    ap.add_argument("--accels", default=",".join(ACCELERATORS))
+    ap.add_argument("--problems", default="bfs,pr")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2 accelerators x 1 small graph x bfs")
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        from repro.graph.generators import GraphSpec
+
+        spec = SweepSpec(name="bench-tiny",
+                         accelerators=("accugraph", "foregraph"),
+                         graphs=(GraphSpec("tiny", "uniform", 256, 1024, True, 1, 0),),
+                         problems=("bfs",))
+    else:
+        spec = SweepSpec(name="bench-tab4",
+                         accelerators=tuple(x for x in args.accels.split(",") if x),
+                         graphs=tuple(x for x in args.graphs.split(",") if x),
+                         problems=tuple(x for x in args.problems.split(",") if x))
+
+    print(f"[bench_engine] preparing {spec.name} chunk ...")
+    t0 = time.time()
+    items, slices = _prepare_chunk(spec)
+    print(f"  {len(slices)} scenarios, {len(items)} traces, "
+          f"{sum(tr.n for tr, *_ in items)} requests "
+          f"(semantics: {time.time() - t0:.1f}s)")
+
+    # warm both paths with a full pass so JIT compilation (once per
+    # (B, L) size bucket) is not in the measured wall
+    _run_sequential(items)
+    simulate_many(items)
+
+    seq_reports, seq = _timed("sequential", _run_sequential, items)
+    bat_reports, bat = _timed("batched", simulate_many, items)
+
+    mismatches = sum(a != b for a, b in zip(seq_reports, bat_reports))
+    assert mismatches == 0, (
+        f"batched reports diverge from sequential on {mismatches}/{len(items)} traces"
+    )
+    print(f"  equivalence: {len(items)}/{len(items)} reports identical")
+
+    result = dict(
+        workload=dict(
+            name=spec.name,
+            scenarios=len(slices),
+            traces=len(items),
+            requests=seq["requests"],
+        ),
+        sequential=seq,
+        batched=bat,
+        dispatch_reduction=round(
+            seq["device_dispatches"] / max(bat["device_dispatches"], 1), 2),
+        wall_speedup=round(seq["wall_s"] / max(bat["wall_s"], 1e-9), 2),
+        reports_identical=True,
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"  wrote {args.out} "
+          f"(dispatch reduction {result['dispatch_reduction']}x, "
+          f"wall speedup {result['wall_speedup']}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -384,6 +384,9 @@ def main() -> None:
     ap.add_argument("--out", default="results/bench")
     ap.add_argument("--workers", type=int, default=0,
                     help="sweep process-pool size; <=1 runs serially")
+    ap.add_argument("--mode", default="batch", choices=("scenario", "batch"),
+                    help="sweep execution mode: batch groups each chunk's "
+                         "DRAM traces into a few device dispatches")
     ap.add_argument("--cache", default="results/sweep_cache",
                     help="sweep result cache directory ('' disables caching)")
     args = ap.parse_args()
@@ -391,7 +394,7 @@ def main() -> None:
 
     def sweep(spec):
         return run_sweep(spec, cache_dir=args.cache or None,
-                         workers=args.workers,
+                         workers=args.workers, mode=args.mode,
                          progress=lambda msg: print(f"  {msg}", flush=True))
 
     validation: dict = {}

@@ -21,7 +21,17 @@ from repro.core.trace import (
     round_robin,
     proportional_interleave,
 )
-from repro.core.engine import simulate_dram, TimingReport
+from repro.core.engine import (
+    TimingReport,
+    TraceBatch,
+    dispatch_stats,
+    reset_dispatch_stats,
+    select_engine,
+    simulate_batch,
+    simulate_dram,
+    simulate_many,
+    simulate_sequential,
+)
 from repro.core.metrics import SimReport
 from repro.core.memory_layout import MemoryLayout
 
@@ -39,7 +49,14 @@ __all__ = [
     "round_robin",
     "proportional_interleave",
     "simulate_dram",
+    "simulate_batch",
+    "simulate_many",
+    "simulate_sequential",
+    "select_engine",
+    "dispatch_stats",
+    "reset_dispatch_stats",
     "TimingReport",
+    "TraceBatch",
     "SimReport",
     "MemoryLayout",
 ]

@@ -3,6 +3,14 @@
 Semantic execution runs host-side in numpy (this mirrors the paper's C++
 simulation environment: trace generation is itself an offline preprocessing
 step), while DRAM timing runs through the JAX engine / Pallas kernel.
+
+Timing is batched: ``simulate_phased`` collects every (phase, channel)
+trace, dispatches them through :func:`repro.core.engine.simulate_batch` in
+one grouped device call per length bucket, and scatters the per-trace
+reports back into the per-phase barrier semantics (sum over phases of the
+max over channels).  ``Accelerator.prepare`` exposes the semantic half on
+its own so a sweep runner can batch timing *across* scenarios
+(:class:`PendingRun` + ``finalize``).
 """
 from __future__ import annotations
 
@@ -12,7 +20,12 @@ import dataclasses
 import numpy as np
 
 from repro.core.dram import DRAMConfig, dram_config
-from repro.core.engine import TimingReport, simulate_channel_fast, simulate_channel_scan
+from repro.core.engine import (
+    SCAN_CUTOFF,
+    TimingReport,
+    simulate_batch,
+    simulate_sequential,
+)
 from repro.core.metrics import IterationStats, SimReport
 from repro.core.trace import Trace
 from repro.graph.problems import Problem
@@ -37,7 +50,7 @@ class AccelConfig:
     optimizations: frozenset = frozenset({"all"})
     engine: str = "auto"
     max_iters: int = 4000
-    scan_cutoff: int = 2_000_000
+    scan_cutoff: int = SCAN_CUTOFF
 
     def has(self, opt: str) -> bool:
         return "all" in self.optimizations or opt in self.optimizations
@@ -54,37 +67,115 @@ class PhasedTrace:
         if any(t.n for t in channel_traces):
             self.phases.append(channel_traces)
 
+    def flatten(self) -> tuple[list[Trace], list[int]]:
+        """The non-empty traces in (phase, channel) order, with each one's
+        phase index — the batch the timing engine dispatches at once."""
+        traces: list[Trace] = []
+        phase_of: list[int] = []
+        for pi, channel_traces in enumerate(self.phases):
+            for tr in channel_traces:
+                if tr.n:
+                    traces.append(tr)
+                    phase_of.append(pi)
+        return traces, phase_of
 
-def simulate_phased(pt: PhasedTrace, cfg: DRAMConfig, accel_cfg: AccelConfig) -> TimingReport:
-    """Time = sum over phases of (max over channels); stats summed."""
+
+def _assemble_phased(
+    pt: PhasedTrace, phase_of: list[int], reports: list[TimingReport],
+    cfg: DRAMConfig,
+) -> TimingReport:
+    """Scatter per-trace reports back into the barrier semantics: time =
+    sum over phases of (max over that phase's channels); stats summed."""
     total = TimingReport.zero()
-    time_ns = 0.0
-    for channel_traces in pt.phases:
-        phase_time = 0.0
-        for tr in channel_traces:
-            if tr.n == 0:
-                continue
-            if accel_cfg.engine == "scan" or (
-                accel_cfg.engine == "auto" and tr.n <= accel_cfg.scan_cutoff
-            ):
-                r = simulate_channel_scan(tr, cfg)
-            else:
-                r = simulate_channel_fast(tr, cfg)
-            phase_time = max(phase_time, r.time_ns)
-            total.hits += r.hits
-            total.misses += r.misses
-            total.conflicts += r.conflicts
-            total.bytes_total += r.bytes_total
-            total.bytes_read += r.bytes_read
-            total.bytes_written += r.bytes_written
-            total.requests += r.requests
-        time_ns += phase_time
+    phase_time = np.zeros(len(pt.phases), dtype=np.float64)
+    for pi, r in zip(phase_of, reports):
+        phase_time[pi] = max(phase_time[pi], r.time_ns)
+        total.hits += r.hits
+        total.misses += r.misses
+        total.conflicts += r.conflicts
+        total.bytes_total += r.bytes_total
+        total.bytes_read += r.bytes_read
+        total.bytes_written += r.bytes_written
+        total.requests += r.requests
+    time_ns = float(sum(phase_time.tolist()))
     total.time_ns = time_ns
     total.cycles = int(time_ns / cfg.tCK_ns) if time_ns else 0
-    total.channels_used = max((len(p) for p in pt.phases), default=0)
-    peak = time_ns * cfg.bw_per_channel * max(cfg.channels, 1)
+    # actual channels used: the widest phase, counting non-empty traces only
+    # (same denominator as simulate_dram).
+    total.channels_used = max(
+        (sum(1 for t in p if t.n) for p in pt.phases), default=0
+    )
+    peak = time_ns * cfg.bw_per_channel * max(total.channels_used, 1)
     total.bw_utilization = total.bytes_total / max(peak, 1e-9)
     return total
+
+
+def simulate_phased(
+    pt: PhasedTrace, cfg: DRAMConfig, accel_cfg: AccelConfig,
+    batched: bool = True,
+) -> TimingReport:
+    """Time = sum over phases of (max over channels); stats summed.
+
+    ``batched=True`` (default) collects all phase/channel traces into one
+    grouped dispatch; ``batched=False`` keeps the historical one-dispatch-
+    per-trace path.  Both produce identical reports.
+    """
+    traces, phase_of = pt.flatten()
+    if batched:
+        reports = simulate_batch(traces, cfg, engine=accel_cfg.engine,
+                                 scan_cutoff=accel_cfg.scan_cutoff)
+    else:
+        reports = simulate_sequential(traces, cfg, accel_cfg.engine,
+                                      accel_cfg.scan_cutoff)
+    return _assemble_phased(pt, phase_of, reports, cfg)
+
+
+@dataclasses.dataclass
+class PendingRun:
+    """A completed semantic execution awaiting DRAM timing.
+
+    Produced by ``Accelerator.prepare``; ``traces()`` exposes the flat
+    trace list so callers (e.g. the sweep runner's batch mode) can time
+    traces from many runs in one grouped dispatch, then ``finalize`` each
+    run with its slice of per-trace reports.
+    """
+
+    accelerator: str
+    graph: str
+    problem: str
+    dram: DRAMConfig
+    config: AccelConfig
+    n: int
+    m: int
+    values: np.ndarray
+    iterations: int
+    pt: PhasedTrace
+    stats: list[IterationStats]
+
+    def traces(self) -> list[Trace]:
+        return self.pt.flatten()[0]
+
+    def finalize(self, reports: list[TimingReport] | None = None) -> SimReport:
+        """Assemble the SimReport; ``reports`` must match ``traces()``
+        one-to-one (omitted: simulate here, batched)."""
+        traces, phase_of = self.pt.flatten()
+        if reports is None:
+            reports = simulate_batch(traces, self.dram, engine=self.config.engine,
+                                     scan_cutoff=self.config.scan_cutoff)
+        assert len(reports) == len(traces)
+        timing = _assemble_phased(self.pt, phase_of, reports, self.dram)
+        return SimReport(
+            accelerator=self.accelerator,
+            graph=self.graph,
+            problem=self.problem,
+            dram=self.dram.name,
+            n=self.n,
+            m=self.m,
+            timing=timing,
+            iterations=self.iterations,
+            per_iteration=self.stats,
+            values=self.values,
+        )
 
 
 class Accelerator(abc.ABC):
@@ -108,13 +199,16 @@ class Accelerator(abc.ABC):
     ) -> tuple[np.ndarray, int, PhasedTrace, list[IterationStats]]:
         ...
 
-    def run(
+    def prepare(
         self,
         g: Graph,
         problem: Problem,
         root: int = 0,
         dram: DRAMConfig | str | None = None,
-    ) -> SimReport:
+    ) -> PendingRun:
+        """Run the semantic half (trace assembly) only; the returned
+        :class:`PendingRun` carries everything ``finalize`` needs once the
+        DRAM timing reports exist."""
         if problem.needs_weights and not self.supports_weights:
             raise ValueError(f"{self.name} does not support weighted problems")
         if isinstance(dram, str):
@@ -122,19 +216,28 @@ class Accelerator(abc.ABC):
         dram = dram or dram_config(self.default_dram)
         gp = problem.prepare_graph(g)
         values, iters, pt, stats = self._execute(gp, problem, root)
-        timing = simulate_phased(pt, dram, self.config)
-        return SimReport(
+        return PendingRun(
             accelerator=self.name,
             graph=g.name,
             problem=problem.name,
-            dram=dram.name,
+            dram=dram,
+            config=self.config,
             n=gp.n,
             m=gp.m,
-            timing=timing,
-            iterations=iters,
-            per_iteration=stats,
             values=values,
+            iterations=iters,
+            pt=pt,
+            stats=stats,
         )
+
+    def run(
+        self,
+        g: Graph,
+        problem: Problem,
+        root: int = 0,
+        dram: DRAMConfig | str | None = None,
+    ) -> SimReport:
+        return self.prepare(g, problem, root=root, dram=dram).finalize()
 
 
 def run_accelerator(

@@ -14,9 +14,19 @@ Two engines with identical request-level semantics:
    and the busiest-bank latency bound.  Used for very long traces; its
    error against the scan engine is reported in EXPERIMENTS.md.
 
+Both engines also exist in *batched* form: :class:`TraceBatch` packs many
+traces into padded ``[B, L]`` bank/row arrays (power-of-two bucketing on
+both axes to bound recompiles) and :func:`simulate_batch` /
+:func:`simulate_many` time a whole batch with a single vmapped device
+dispatch per (timing-config, length-bucket) group instead of one dispatch
+and one blocking host sync per trace.  The batched path produces
+*identical* ``TimingReport`` s to the per-trace path: padding requests are
+no-ops in the scan engine, so the bucket length never affects results.
+
 The TPU-native production implementation of engine (1) is the Pallas kernel
 in ``repro/kernels/dram_timing`` (blocked request streaming HBM->VMEM with
-bank state held in VMEM scratch across sequential grid steps).
+bank state held in VMEM scratch across sequential grid steps; one grid row
+per batched trace).
 
 Bank mapping (row-interleaved): line -> (col, bank, row) with
 ``col = line % lines_per_row``, ``bank = (line / lines_per_row) % nbanks``,
@@ -28,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +51,55 @@ from repro.core.trace import Trace
 # engines).  Bump whenever a change alters simulation *results*; the sweep
 # result cache (repro.sweep.cache) keys on it, so stale cached reports are
 # invalidated automatically.
-ENGINE_VERSION = "1"
+# v2: bw_utilization denominator unified on actual channels used (previously
+# simulate_phased divided by cfg.channels, simulate_dram by len(traces)).
+ENGINE_VERSION = "2"
+
+# Default request-count threshold of the "auto" engine policy: traces up to
+# this many requests use the exact scan engine, longer ones the analytic
+# fast engine.
+SCAN_CUTOFF = 2_000_000
+
+# Cap on B*L elements of one batched dispatch (keeps padded request arrays
+# a few dozen MB); larger groups are split into several dispatches.
+MAX_BATCH_ELEMS = 4 << 20
+
+
+def select_engine(trace_len: int, engine: str = "auto",
+                  scan_cutoff: int = SCAN_CUTOFF) -> str:
+    """The single engine-selection policy: resolve ``engine`` ("auto" |
+    "scan" | "fast") for a trace of ``trace_len`` requests."""
+    if engine == "auto":
+        return "scan" if trace_len <= scan_cutoff else "fast"
+    if engine not in ("scan", "fast"):
+        raise ValueError(f"unknown engine {engine!r} (use auto|scan|fast)")
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting
+# ---------------------------------------------------------------------------
+
+# Device-dispatch counters (scan-engine invocations; the fast engine is
+# host-side numpy and launches nothing).  ``benchmarks/bench_engine.py``
+# reports these for the sequential vs batched paths.
+_DISPATCH = dict(dispatches=0, traces=0, requests=0)
+
+
+def reset_dispatch_stats() -> None:
+    _DISPATCH.update(dispatches=0, traces=0, requests=0)
+
+
+def dispatch_stats() -> dict:
+    """Counters since the last reset: device ``dispatches``, ``traces``
+    timed through them, and true (unpadded) ``requests`` simulated."""
+    return dict(_DISPATCH)
+
+
+def _record_dispatch(n_traces: int, n_requests: int) -> None:
+    _DISPATCH["dispatches"] += 1
+    _DISPATCH["traces"] += n_traces
+    _DISPATCH["requests"] += n_requests
 
 
 @dataclasses.dataclass
@@ -79,8 +138,7 @@ def decode(lines: np.ndarray, cfg: DRAMConfig) -> tuple[np.ndarray, np.ndarray]:
     return bank.astype(np.int32), row.astype(np.int32)
 
 
-@partial(jax.jit, static_argnames=("nbanks", "tCL", "tRCD", "tRP", "tRC", "tBL", "lookahead"))
-def _scan_engine(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
+def _scan_engine_impl(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
     """Exact sequential engine.  All times in int32 memory-clock cycles.
 
     Pipelined model: column reads from an open row stream back-to-back at
@@ -98,8 +156,9 @@ def _scan_engine(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
       (then row_ready[b] = t_act + tRCD and served as a hit)
 
     The constant final column latency tCL is added once at the end.
+    Padding requests (bank == -1) are no-ops, so a trace padded to any
+    length yields the same result.
     """
-    n = bank.shape[0]
 
     def step(carry, req):
         open_row, row_ready, last_data, last_act, bus_free, hits, misses, conflicts = carry
@@ -149,6 +208,20 @@ def _scan_engine(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
     return bus_free + tCL, hits, misses, conflicts
 
 
+_ENGINE_STATICS = ("nbanks", "tCL", "tRCD", "tRP", "tRC", "tBL", "lookahead")
+
+_scan_engine = partial(jax.jit, static_argnames=_ENGINE_STATICS)(_scan_engine_impl)
+
+
+@partial(jax.jit, static_argnames=_ENGINE_STATICS)
+def _scan_engine_batch(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
+    """Batched exact engine: vmap of the scan over the leading [B] axis.
+    Returns per-trace (cycles[B], hits[B], misses[B], conflicts[B])."""
+    f = partial(_scan_engine_impl, nbanks=nbanks, tCL=tCL, tRCD=tRCD,
+                tRP=tRP, tRC=tRC, tBL=tBL, lookahead=lookahead)
+    return jax.vmap(f)(bank, row)
+
+
 def classify_fast(bank: np.ndarray, row: np.ndarray, nbanks: int) -> np.ndarray:
     """Exact hit(0)/miss(1)/conflict(2) classification, vectorised.
 
@@ -172,75 +245,77 @@ def classify_fast(bank: np.ndarray, row: np.ndarray, nbanks: int) -> np.ndarray:
     return cls
 
 
-def _pad_pow2(bank: np.ndarray, row: np.ndarray, minimum: int = 256):
-    """Pad request arrays to the next power of two so the jitted scan engine
-    compiles once per size class instead of once per trace length."""
-    n = len(bank)
+def _pow2_bucket(n: int, minimum: int = 256) -> int:
+    """Smallest power-of-two >= n (>= minimum): the padded size class, so
+    the jitted engines compile once per bucket instead of once per shape."""
     target = minimum
     while target < n:
         target *= 2
-    pad = target - n
+    return target
+
+
+def _pad_pow2(bank: np.ndarray, row: np.ndarray, minimum: int = 256):
+    """Pad request arrays to the next power of two so the jitted scan engine
+    compiles once per size class instead of once per trace length."""
+    target = _pow2_bucket(len(bank), minimum)
+    pad = target - len(bank)
     if pad:
         bank = np.concatenate([bank, np.full(pad, -1, dtype=bank.dtype)])
         row = np.concatenate([row, np.zeros(pad, dtype=row.dtype)])
     return bank, row
 
 
-def simulate_channel_scan(trace: Trace, cfg: DRAMConfig) -> TimingReport:
-    if trace.n == 0:
-        return TimingReport.zero()
-    bank, row = decode(trace.lines, cfg)
-    bank, row = _pad_pow2(bank, row)
-    t = cfg.timing_cycles()
-    cycles, hits, misses, conflicts = _scan_engine(
-        jnp.asarray(bank), jnp.asarray(row), cfg.nbanks,
-        t["tCL"], t["tRCD"], t["tRP"], t["tRC"], t["tBL"],
-        lookahead=16 * t["tBL"],
-    )
-    cycles = int(cycles)
+@dataclasses.dataclass
+class TraceBatch:
+    """A batch of decoded traces packed into padded ``[B, L]`` arrays.
+
+    ``bank`` rows are padded with -1 (engine no-ops); both L (request axis)
+    and B (batch axis) are padded to power-of-two buckets so the batched
+    engines compile once per (B, L) size class.  ``lengths`` holds the true
+    per-trace request counts; rows past ``size`` are pure padding.
+    """
+
+    bank: np.ndarray  # [B, L] int32, -1 padded
+    row: np.ndarray  # [B, L] int32
+    lengths: np.ndarray  # [size] int64 true request counts
+    traces: list[Trace]  # originals, for byte/request accounting
+
+    @property
+    def size(self) -> int:
+        """Number of real traces (the batch axis may be padded beyond)."""
+        return len(self.traces)
+
+    @property
+    def bucket_len(self) -> int:
+        return int(self.bank.shape[1])
+
+    @staticmethod
+    def from_traces(
+        traces: Sequence[Trace],
+        cfg: DRAMConfig,
+        min_len: int = 256,
+        pad_batch: bool = True,
+    ) -> "TraceBatch":
+        """Decode + pack traces (empty ones become all-padding rows).  The
+        request axis is padded to the power-of-two bucket of the longest
+        trace; the batch axis to a power of two when ``pad_batch``."""
+        lengths = np.array([t.n for t in traces], dtype=np.int64)
+        L = _pow2_bucket(int(lengths.max()) if len(traces) else 0, min_len)
+        B = _pow2_bucket(max(len(traces), 1), 1) if pad_batch else max(len(traces), 1)
+        bank = np.full((B, L), -1, dtype=np.int32)
+        row = np.zeros((B, L), dtype=np.int32)
+        for i, t in enumerate(traces):
+            if t.n:
+                bank[i, : t.n], row[i, : t.n] = decode(t.lines, cfg)
+        return TraceBatch(bank, row, lengths, list(traces))
+
+
+def _channel_report(trace: Trace, cfg: DRAMConfig, cycles: int,
+                    hits: int, misses: int, conflicts: int) -> TimingReport:
+    """Single-channel report from engine counters (shared by the per-trace
+    and batched paths, so both construct bit-identical reports)."""
     time_ns = cycles * cfg.tCK_ns
     peak_bytes = time_ns * cfg.bw_per_channel  # GB/s == B/ns
-    return TimingReport(
-        time_ns=time_ns,
-        cycles=cycles,
-        hits=int(hits),
-        misses=int(misses),
-        conflicts=int(conflicts),
-        bytes_total=trace.bytes,
-        bytes_read=trace.read_bytes,
-        bytes_written=trace.write_bytes,
-        requests=trace.n,
-        channels_used=1,
-        bw_utilization=trace.bytes / max(peak_bytes, 1e-9),
-    )
-
-
-def simulate_channel_fast(trace: Trace, cfg: DRAMConfig) -> TimingReport:
-    """Analytic engine: exact request classification, approximate time.
-
-    time ~= max( bus bound, busiest-bank latency bound ) where the bank
-    bound accounts for tRC-limited back-to-back activates."""
-    if trace.n == 0:
-        return TimingReport.zero()
-    bank, row = decode(trace.lines, cfg)
-    cls = classify_fast(bank, row, cfg.nbanks)
-    t = cfg.timing_cycles()
-    hits = int((cls == 0).sum())
-    misses = int((cls == 1).sum())
-    conflicts = int((cls == 2).sum())
-
-    bus_bound = trace.n * t["tBL"]
-    # per-bank serial chain: hits stream at the bus rate; a miss costs
-    # max(tRC, tRCD+tBL) in its bank, a conflict max(tRC, tRP+tRCD+tBL)
-    # (matching the scan engine's per-bank dependency chain).
-    miss_cost = max(t["tRC"], t["tRCD"] + t["tBL"])
-    conf_cost = max(t["tRC"], t["tRP"] + t["tRCD"] + t["tBL"])
-    act_cost = np.where(cls == 0, t["tBL"], np.where(cls == 1, miss_cost, conf_cost))
-    per_bank = np.bincount(bank, weights=act_cost, minlength=cfg.nbanks)
-    bank_bound = int(per_bank.max())
-    cycles = int(max(bus_bound, bank_bound)) + t["tCL"]
-    time_ns = cycles * cfg.tCK_ns
-    peak_bytes = time_ns * cfg.bw_per_channel
     return TimingReport(
         time_ns=time_ns,
         cycles=cycles,
@@ -256,28 +331,251 @@ def simulate_channel_fast(trace: Trace, cfg: DRAMConfig) -> TimingReport:
     )
 
 
+def simulate_channel_scan(trace: Trace, cfg: DRAMConfig) -> TimingReport:
+    if trace.n == 0:
+        return TimingReport.zero()
+    bank, row = decode(trace.lines, cfg)
+    bank, row = _pad_pow2(bank, row)
+    t = cfg.timing_cycles()
+    cycles, hits, misses, conflicts = _scan_engine(
+        jnp.asarray(bank), jnp.asarray(row), cfg.nbanks,
+        t["tCL"], t["tRCD"], t["tRP"], t["tRC"], t["tBL"],
+        lookahead=16 * t["tBL"],
+    )
+    _record_dispatch(1, trace.n)
+    return _channel_report(trace, cfg, int(cycles), int(hits), int(misses),
+                           int(conflicts))
+
+
+def _fast_cycles(n: int, cls: np.ndarray, bank: np.ndarray, cfg: DRAMConfig,
+                 t: dict[str, int]) -> tuple[int, int, int, int]:
+    """Shared analytic-time formula on a single trace's classification."""
+    hits = int((cls == 0).sum())
+    misses = int((cls == 1).sum())
+    conflicts = int((cls == 2).sum())
+    bus_bound = n * t["tBL"]
+    # per-bank serial chain: hits stream at the bus rate; a miss costs
+    # max(tRC, tRCD+tBL) in its bank, a conflict max(tRC, tRP+tRCD+tBL)
+    # (matching the scan engine's per-bank dependency chain).
+    miss_cost = max(t["tRC"], t["tRCD"] + t["tBL"])
+    conf_cost = max(t["tRC"], t["tRP"] + t["tRCD"] + t["tBL"])
+    act_cost = np.where(cls == 0, t["tBL"], np.where(cls == 1, miss_cost, conf_cost))
+    per_bank = np.bincount(bank, weights=act_cost, minlength=cfg.nbanks)
+    bank_bound = int(per_bank.max())
+    cycles = int(max(bus_bound, bank_bound)) + t["tCL"]
+    return cycles, hits, misses, conflicts
+
+
+def simulate_channel_fast(trace: Trace, cfg: DRAMConfig) -> TimingReport:
+    """Analytic engine: exact request classification, approximate time.
+
+    time ~= max( bus bound, busiest-bank latency bound ) where the bank
+    bound accounts for tRC-limited back-to-back activates."""
+    if trace.n == 0:
+        return TimingReport.zero()
+    bank, row = decode(trace.lines, cfg)
+    cls = classify_fast(bank, row, cfg.nbanks)
+    t = cfg.timing_cycles()
+    cycles, hits, misses, conflicts = _fast_cycles(trace.n, cls, bank, cfg, t)
+    return _channel_report(trace, cfg, cycles, hits, misses, conflicts)
+
+
+def _classify_fast_batch(bank: np.ndarray, row: np.ndarray, valid: np.ndarray,
+                         nbanks: int) -> np.ndarray:
+    """Batched exact classification on padded [B, L] arrays.  Padding slots
+    get sort-key ``nbanks`` (past any real bank) so the stable per-row sort
+    orders real requests exactly as the per-trace classifier; entries at
+    ``~valid`` positions are garbage and must be masked by the caller."""
+    B, L = bank.shape
+    bkey = np.where(valid, bank, np.int32(nbanks))
+    order = np.argsort(bkey, axis=1, kind="stable")
+    sb = np.take_along_axis(bkey, order, axis=1)
+    sr = np.take_along_axis(row, order, axis=1)
+    same_bank = sb[:, 1:] == sb[:, :-1]
+    cls_sorted = np.full((B, L), 1, dtype=np.int8)
+    hit = np.zeros((B, L), dtype=bool)
+    conf = np.zeros((B, L), dtype=bool)
+    hit[:, 1:] = same_bank & (sr[:, 1:] == sr[:, :-1])
+    conf[:, 1:] = same_bank & (sr[:, 1:] != sr[:, :-1])
+    cls_sorted[hit] = 0
+    cls_sorted[conf] = 2
+    cls = np.empty((B, L), dtype=np.int8)
+    np.put_along_axis(cls, order, cls_sorted, axis=1)
+    return cls
+
+
+def _simulate_fast_batch(traces: list[Trace], cfg: DRAMConfig) -> list[TimingReport]:
+    """Batched analytic engine: one vectorised pass over padded [B, L]
+    arrays.  All arithmetic is integer-exact (cycle counts summed in
+    float64 stay below 2**53), so results equal the per-trace fast engine
+    bit-for-bit."""
+    batch = TraceBatch.from_traces(traces, cfg, pad_batch=False)
+    B, L = batch.bank.shape  # pad_batch=False keeps B == len(traces)
+    valid = np.arange(L)[None, :] < batch.lengths[:, None]
+    cls = _classify_fast_batch(batch.bank, batch.row, valid, cfg.nbanks)
+    t = cfg.timing_cycles()
+    miss_cost = max(t["tRC"], t["tRCD"] + t["tBL"])
+    conf_cost = max(t["tRC"], t["tRP"] + t["tRCD"] + t["tBL"])
+    act_cost = np.where(cls == 0, t["tBL"], np.where(cls == 1, miss_cost, conf_cost))
+    act_cost = np.where(valid, act_cost, 0)
+    flat_bank = (np.arange(B)[:, None] * cfg.nbanks
+                 + np.where(valid, batch.bank, 0)).ravel()
+    per_bank = np.bincount(
+        flat_bank, weights=act_cost.ravel().astype(np.float64),
+        minlength=B * cfg.nbanks,
+    ).reshape(B, cfg.nbanks)
+    reports = []
+    for i, tr in enumerate(traces):
+        if tr.n == 0:
+            reports.append(TimingReport.zero())
+            continue
+        v = valid[i]
+        hits = int(((cls[i] == 0) & v).sum())
+        misses = int(((cls[i] == 1) & v).sum())
+        conflicts = int(((cls[i] == 2) & v).sum())
+        bus_bound = tr.n * t["tBL"]
+        bank_bound = int(per_bank[i].max())
+        cycles = int(max(bus_bound, bank_bound)) + t["tCL"]
+        reports.append(_channel_report(tr, cfg, cycles, hits, misses, conflicts))
+    return reports
+
+
+def _chunk(seq: list, size: int):
+    for i in range(0, len(seq), size):
+        yield seq[i : i + size]
+
+
+def simulate_sequential(
+    traces: Sequence[Trace],
+    cfg: DRAMConfig,
+    engine: str = "auto",
+    scan_cutoff: int = SCAN_CUTOFF,
+) -> list[TimingReport]:
+    """The one-dispatch-per-trace path: the equivalence oracle for the
+    batched engines (and the benchmark baseline)."""
+    return [
+        simulate_channel_scan(tr, cfg)
+        if select_engine(tr.n, engine, scan_cutoff) == "scan"
+        else simulate_channel_fast(tr, cfg)
+        for tr in traces
+    ]
+
+
+def simulate_batch(
+    traces: Sequence[Trace],
+    cfg: DRAMConfig,
+    engine: str = "auto",
+    scan_cutoff: int = SCAN_CUTOFF,
+) -> list[TimingReport]:
+    """Time many single-channel traces with a handful of device dispatches.
+
+    Traces routed to the scan engine are grouped into power-of-two length
+    buckets; each bucket is one :class:`TraceBatch` and one vmapped
+    ``_scan_engine_batch`` call (split only past :data:`MAX_BATCH_ELEMS`).
+    Fast-engine traces go through one vectorised host-side pass.  Returns
+    per-trace reports in input order, identical to calling
+    ``simulate_channel_scan`` / ``simulate_channel_fast`` per trace.
+    """
+    reports: list[TimingReport | None] = [None] * len(traces)
+    by_bucket: dict[int, list[int]] = {}
+    fast_by_bucket: dict[int, list[int]] = {}
+    for i, tr in enumerate(traces):
+        if tr.n == 0:
+            reports[i] = TimingReport.zero()
+        elif select_engine(tr.n, engine, scan_cutoff) == "scan":
+            by_bucket.setdefault(_pow2_bucket(tr.n), []).append(i)
+        else:
+            fast_by_bucket.setdefault(_pow2_bucket(tr.n), []).append(i)
+
+    t = cfg.timing_cycles()
+    for L, idxs in sorted(by_bucket.items()):
+        for chunk in _chunk(idxs, max(1, MAX_BATCH_ELEMS // L)):
+            batch = TraceBatch.from_traces([traces[i] for i in chunk], cfg)
+            cycles, hits, misses, conflicts = _scan_engine_batch(
+                jnp.asarray(batch.bank), jnp.asarray(batch.row), cfg.nbanks,
+                t["tCL"], t["tRCD"], t["tRP"], t["tRC"], t["tBL"],
+                lookahead=16 * t["tBL"],
+            )
+            _record_dispatch(len(chunk), int(batch.lengths.sum()))
+            cycles, hits, misses, conflicts = (  # one host sync per dispatch
+                np.asarray(cycles), np.asarray(hits),
+                np.asarray(misses), np.asarray(conflicts),
+            )
+            for j, i in enumerate(chunk):
+                reports[i] = _channel_report(
+                    traces[i], cfg, int(cycles[j]), int(hits[j]),
+                    int(misses[j]), int(conflicts[j]),
+                )
+
+    # fast traces are bucketed + chunked like scan traces so padding waste
+    # stays < 2x and one vectorised pass never allocates unbounded [B, L]
+    for L, idxs in sorted(fast_by_bucket.items()):
+        for chunk in _chunk(idxs, max(1, MAX_BATCH_ELEMS // L)):
+            for i, r in zip(chunk, _simulate_fast_batch(
+                    [traces[i] for i in chunk], cfg)):
+                reports[i] = r
+    return reports  # type: ignore[return-value]
+
+
+def _timing_key(cfg: DRAMConfig) -> tuple:
+    """Everything of a DRAMConfig that determines a single-channel report:
+    address mapping, cycle timings, and the ns/bandwidth scale factors."""
+    t = cfg.timing_cycles()
+    return (cfg.nbanks, cfg.lines_per_row, t["tCL"], t["tRCD"], t["tRP"],
+            t["tRC"], t["tBL"], cfg.tCK_ns, cfg.bw_per_channel)
+
+
+def simulate_many(
+    items: Sequence[tuple[Trace, DRAMConfig, str, int]],
+) -> list[TimingReport]:
+    """Cross-configuration batcher: time ``(trace, cfg, engine,
+    scan_cutoff)`` work items from many simulations (e.g. a sweep chunk)
+    in one grouped pass — one dispatch per (timing-config, engine,
+    length-bucket) group.  Returns reports in input order, identical to
+    per-item simulation."""
+    reports: list[TimingReport | None] = [None] * len(items)
+    groups: dict[tuple, list[int]] = {}
+    for i, (tr, cfg, engine, cutoff) in enumerate(items):
+        if tr.n == 0:
+            reports[i] = TimingReport.zero()
+        else:
+            eng = select_engine(tr.n, engine, cutoff)
+            groups.setdefault((_timing_key(cfg), eng), []).append(i)
+    for (_, eng), idxs in groups.items():
+        cfg = items[idxs[0]][1]
+        for i, r in zip(idxs, simulate_batch(
+                [items[i][0] for i in idxs], cfg, engine=eng)):
+            reports[i] = r
+    return reports  # type: ignore[return-value]
+
+
 def simulate_dram(
     traces: list[Trace],
     cfg: DRAMConfig,
     engine: str = "auto",
-    scan_cutoff: int = 2_000_000,
+    scan_cutoff: int = SCAN_CUTOFF,
+    batched: bool = True,
 ) -> TimingReport:
     """Simulate one trace per channel; total time = max over channels
-    (channels operate independently); stats are summed."""
+    (channels operate independently); stats are summed.
+
+    ``batched=True`` (default) times all channels in one grouped dispatch;
+    ``batched=False`` keeps the one-dispatch-per-trace path (the
+    equivalence oracle for tests and benchmarks).  Results are identical.
+    """
     assert len(traces) <= cfg.channels, (
         f"{len(traces)} traces for {cfg.channels}-channel {cfg.name}"
     )
-    reports = []
-    for tr in traces:
-        if engine == "scan" or (engine == "auto" and tr.n <= scan_cutoff):
-            reports.append(simulate_channel_scan(tr, cfg))
-        else:
-            reports.append(simulate_channel_fast(tr, cfg))
-    if not reports:
+    if not traces:
         return TimingReport.zero()
+    if batched:
+        reports = simulate_batch(traces, cfg, engine=engine, scan_cutoff=scan_cutoff)
+    else:
+        reports = simulate_sequential(traces, cfg, engine, scan_cutoff)
     time_ns = max(r.time_ns for r in reports)
     tot_bytes = sum(r.bytes_total for r in reports)
-    peak = time_ns * cfg.bw_per_channel * len(reports)
+    channels_used = sum(tr.n > 0 for tr in traces)
+    peak = time_ns * cfg.bw_per_channel * max(channels_used, 1)
     return TimingReport(
         time_ns=time_ns,
         cycles=max(r.cycles for r in reports),
@@ -288,6 +586,6 @@ def simulate_dram(
         bytes_read=sum(r.bytes_read for r in reports),
         bytes_written=sum(r.bytes_written for r in reports),
         requests=sum(r.requests for r in reports),
-        channels_used=len(reports),
+        channels_used=channels_used,
         bw_utilization=tot_bytes / max(peak, 1e-9),
     )

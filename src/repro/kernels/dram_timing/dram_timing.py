@@ -9,8 +9,15 @@ The per-request dependency chain is resolved with an in-kernel fori_loop
 over the VMEM-resident block (the block is the unit of HBM traffic; the
 serial chain never touches HBM).
 
+The grid is two-dimensional: ``(B, n_blocks)``.  The trailing (fastest)
+dimension walks one trace's request blocks sequentially; the leading
+dimension advances to the next trace of the batch, re-initialising the
+VMEM bank state at its first block.  One ``pallas_call`` therefore times a
+whole :class:`repro.core.engine.TraceBatch` — one device dispatch per
+batch, not per trace.
+
 Timing semantics are identical to ``repro.core.engine._scan_engine``
-(`ref.py` re-exports it as the oracle).
+(`ref.py` re-exports it, and its vmapped batch form, as the oracles).
 """
 from __future__ import annotations
 
@@ -26,14 +33,16 @@ STATE_BANKS_PAD = 128  # lane-aligned bank-state vectors
 
 def _kernel(bank_ref, row_ref, out_ref, state_ref, scalars_ref, *, nbanks,
             tCL, tRCD, tRP, tRC, tBL, lookahead, block, n_blocks):
-    """One grid step: consume `block` requests.
+    """One grid step: consume `block` requests of one batch row.
 
     state_ref: (4, STATE_BANKS_PAD) int32 VMEM scratch
        rows: 0=open_row, 1=row_ready, 2=last_data, 3=last_act
     scalars_ref: (1, 8) int32 VMEM scratch
        cols: 0=bus_free, 1=hits, 2=misses, 3=conflicts
+    Scratch persists across the sequential grid; step == 0 of each batch
+    row resets it so every trace starts from a cold, precharged device.
     """
-    step = pl.program_id(0)
+    step = pl.program_id(1)
 
     @pl.when(step == 0)
     def _init():
@@ -101,6 +110,51 @@ def _kernel(bank_ref, row_ref, out_ref, state_ref, scalars_ref, *, nbanks,
     static_argnames=("nbanks", "tCL", "tRCD", "tRP", "tRC", "tBL",
                      "lookahead", "block", "interpret"),
 )
+def dram_timing_pallas_batch(
+    bank: jnp.ndarray,
+    row: jnp.ndarray,
+    *,
+    nbanks: int,
+    tCL: int,
+    tRCD: int,
+    tRP: int,
+    tRC: int,
+    tBL: int,
+    lookahead: int,
+    block: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched kernel entry: bank/row are [B, L] with L a multiple of
+    `block` and padding requests marked bank == -1.  Returns int32[B, 4]:
+    per-trace (total_cycles, hits, misses, conflicts) from ONE dispatch.
+    """
+    assert nbanks <= STATE_BANKS_PAD
+    assert bank.ndim == 2, "batched kernel expects [B, L] request arrays"
+    b_sz, n = bank.shape
+    assert n % block == 0, "pad the trace to a multiple of the block size"
+    n_blocks = n // block
+    kernel = functools.partial(
+        _kernel, nbanks=nbanks, tCL=tCL, tRCD=tRCD, tRP=tRP, tRC=tRC,
+        tBL=tBL, lookahead=lookahead, block=block, n_blocks=n_blocks,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b_sz, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda b, i: (b, i)),
+            pl.BlockSpec((1, block), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 8), lambda b, i: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_sz, 8), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((4, STATE_BANKS_PAD), jnp.int32),
+            pltpu.VMEM((1, 8), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bank, row)
+    return out[:, :4]
+
+
 def dram_timing_pallas(
     bank: jnp.ndarray,
     row: jnp.ndarray,
@@ -115,33 +169,14 @@ def dram_timing_pallas(
     block: int = 512,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Returns int32[4]: (total_cycles, hits, misses, conflicts).
+    """Single-trace entry (batch of one): returns int32[4]:
+    (total_cycles, hits, misses, conflicts).
 
     bank/row must be pre-padded to a multiple of `block` with bank == -1.
     """
-    assert nbanks <= STATE_BANKS_PAD
-    n = bank.shape[0]
-    assert n % block == 0, "pad the trace to a multiple of the block size"
-    n_blocks = n // block
-    bank2 = bank.reshape(1, n)
-    row2 = row.reshape(1, n)
-    kernel = functools.partial(
-        _kernel, nbanks=nbanks, tCL=tCL, tRCD=tRCD, tRP=tRP, tRC=tRC,
-        tBL=tBL, lookahead=lookahead, block=block, n_blocks=n_blocks,
+    out = dram_timing_pallas_batch(
+        bank.reshape(1, -1), row.reshape(1, -1), nbanks=nbanks, tCL=tCL,
+        tRCD=tRCD, tRP=tRP, tRC=tRC, tBL=tBL, lookahead=lookahead,
+        block=block, interpret=interpret,
     )
-    out = pl.pallas_call(
-        kernel,
-        grid=(n_blocks,),
-        in_specs=[
-            pl.BlockSpec((1, block), lambda i: (0, i)),
-            pl.BlockSpec((1, block), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((1, 8), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 8), jnp.int32),
-        scratch_shapes=[
-            pltpu.VMEM((4, STATE_BANKS_PAD), jnp.int32),
-            pltpu.VMEM((1, 8), jnp.int32),
-        ],
-        interpret=interpret,
-    )(bank2, row2)
-    return out[0, :4]
+    return out[0]

@@ -1,10 +1,11 @@
-"""Pure-jnp oracle for the dram_timing Pallas kernel: the lax.scan engine
-from repro.core.engine (the simulation environment's ground truth)."""
+"""Pure-jnp oracles for the dram_timing Pallas kernel: the lax.scan engine
+from repro.core.engine (the simulation environment's ground truth), in
+single-trace and batched (vmapped) form."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.engine import _scan_engine
+from repro.core.engine import _scan_engine, _scan_engine_batch
 
 
 def dram_timing_ref(bank, row, *, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
@@ -14,3 +15,15 @@ def dram_timing_ref(bank, row, *, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
         lookahead,
     )
     return jnp.stack([cycles, hits, misses, conflicts]).astype(jnp.int32)
+
+
+def dram_timing_ref_batch(bank, row, *, nbanks, tCL, tRCD, tRP, tRC, tBL,
+                          lookahead):
+    """Batched oracle on [B, L] request arrays: int32[B, 4] per-trace
+    (total_cycles, hits, misses, conflicts), matching the batched kernel's
+    output layout."""
+    cycles, hits, misses, conflicts = _scan_engine_batch(
+        jnp.asarray(bank), jnp.asarray(row), nbanks, tCL, tRCD, tRP, tRC, tBL,
+        lookahead,
+    )
+    return jnp.stack([cycles, hits, misses, conflicts], axis=1).astype(jnp.int32)

@@ -22,6 +22,7 @@ from repro.sweep.runner import (
     ScenarioResult,
     SweepResult,
     execute_scenario,
+    execute_scenarios_batch,
     run_sweep,
 )
 from repro.sweep.spec import ConfigOverride, Scenario, Skipped, SweepSpec
@@ -35,6 +36,7 @@ __all__ = [
     "SweepResult",
     "SweepSpec",
     "execute_scenario",
+    "execute_scenarios_batch",
     "rank",
     "result_rows",
     "run_sweep",

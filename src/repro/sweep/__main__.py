@@ -59,6 +59,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--engine", default="", help="DRAM engine override (scan|fast)")
     ap.add_argument("--workers", type=int, default=0,
                     help="process-pool size; <=1 runs serially")
+    ap.add_argument("--mode", default="scenario", choices=("scenario", "batch"),
+                    help="batch: group all DRAM traces of a worker's chunk "
+                         "into a few batched device dispatches")
     ap.add_argument("--cache", default="results/sweep_cache",
                     help="result cache directory ('' disables caching)")
     ap.add_argument("--out", default="results/sweep", help="output directory")
@@ -85,6 +88,7 @@ def main(argv: list[str] | None = None) -> int:
         spec,
         cache_dir=args.cache or None,
         workers=args.workers,
+        mode=args.mode,
         progress=lambda msg: print(msg, flush=True),
     )
     rows = result_rows(result, with_status=True)

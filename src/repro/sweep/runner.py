@@ -14,6 +14,18 @@ One failing scenario becomes an ``error`` row with its traceback; the sweep
 continues.  Result order is the spec's expansion order, independent of
 completion order, so ``--workers N`` yields byte-identical result rows to a
 serial run.
+
+Two execution modes (``mode=``):
+
+- ``"scenario"`` — each scenario simulates its own traces (one device
+  dispatch per trace inside the accelerator run).
+- ``"batch"`` — scenarios in a worker's chunk run their *semantic* halves
+  first (``Accelerator.prepare``), then every DRAM trace of the whole
+  chunk is timed through ``repro.core.engine.simulate_many`` in a handful
+  of grouped dispatches (one per timing-config x length-bucket), and the
+  per-trace reports are scattered back into each scenario's report.
+  Results are identical to scenario mode; only the dispatch count and
+  wall time differ.
 """
 from __future__ import annotations
 
@@ -43,6 +55,32 @@ def _graph(spec: GraphSpec) -> Graph:
     return g
 
 
+def _graph_stats(g) -> dict:
+    return dict(
+        n=g.n,
+        m=g.m,
+        avg_degree=g.avg_degree,
+        degree_skewness=g.degree_skewness,
+    )
+
+
+def _ok_record(rep, graph_stats: dict, wall_s: float) -> dict:
+    return dict(
+        status="ok",
+        report=rep.to_dict(),
+        graph_stats=graph_stats,
+        wall_s=round(wall_s, 3),
+    )
+
+
+def _error_record(t0: float) -> dict:
+    return dict(
+        status="error",
+        error=traceback.format_exc(),
+        wall_s=round(time.time() - t0, 3),
+    )
+
+
 def execute_scenario(scenario: Scenario) -> dict:
     """Run one scenario to a plain-dict record.  Never raises: failures are
     isolated into ``{"status": "error"}`` records."""
@@ -59,23 +97,81 @@ def execute_scenario(scenario: Scenario) -> dict:
             dram=scenario.dram,
             config=scenario.config,
         )
-        return dict(
-            status="ok",
-            report=rep.to_dict(),
-            graph_stats=dict(
-                n=g.n,
-                m=g.m,
-                avg_degree=g.avg_degree,
-                degree_skewness=g.degree_skewness,
-            ),
-            wall_s=round(time.time() - t0, 3),
-        )
+        return _ok_record(rep, _graph_stats(g), time.time() - t0)
     except Exception:
-        return dict(
-            status="error",
-            error=traceback.format_exc(),
-            wall_s=round(time.time() - t0, 3),
-        )
+        return _error_record(t0)
+
+
+def execute_scenarios_batch(scenarios: list[Scenario]) -> list[dict]:
+    """Run a chunk of scenarios with cross-scenario batched DRAM timing.
+
+    All scenarios' semantic halves (``Accelerator.prepare``) run first;
+    the chunk's traces are then timed in one ``simulate_many`` pass (one
+    device dispatch per timing-config x length-bucket group) and scattered
+    back.  Per-scenario failures are isolated exactly like
+    ``execute_scenario``; a failure inside the shared timing pass falls
+    back to per-scenario finalization so one bad trace batch cannot poison
+    the chunk.  Records (and therefore reports) are identical to
+    scenario-mode execution.
+    """
+    from repro.core.accelerators import ACCELERATORS
+    from repro.core.engine import simulate_many
+
+    records: list[dict | None] = [None] * len(scenarios)
+    prepared: list[tuple | None] = [None] * len(scenarios)
+    for i, s in enumerate(scenarios):
+        t0 = time.time()
+        try:
+            g = _graph(s.graph)
+            accel = ACCELERATORS[s.accelerator](s.config)
+            pending = accel.prepare(g, PROBLEMS[s.problem], root=s.root,
+                                    dram=s.dram)
+            # only the scalar stats are kept: the chunk must not pin every
+            # graph's edge arrays until the last finalize
+            prepared[i] = (pending, pending.traces(), _graph_stats(g),
+                           time.time() - t0)
+        except Exception:
+            records[i] = _error_record(t0)
+
+    items = []
+    for p in prepared:
+        if p is not None:
+            pending, traces, _, _ = p
+            items += [(tr, pending.dram, pending.config.engine,
+                       pending.config.scan_cutoff) for tr in traces]
+    timing_fallback = None
+    try:
+        t_sim = time.time()
+        reports = simulate_many(items)
+        sim_share = (time.time() - t_sim) / max(len(items), 1)
+    except Exception:
+        reports = None  # grouped pass failed: fall back per scenario
+        sim_share = 0.0
+        # surface the degradation: results stay correct but the batched
+        # dispatch win is gone, which must be visible in the records
+        timing_fallback = traceback.format_exc(limit=3)
+
+    offset = 0
+    for i, p in enumerate(prepared):
+        if p is None:
+            continue
+        pending, traces, gstats, prep_wall = p
+        t_fin = time.time()
+        try:
+            if reports is None:
+                rep = pending.finalize()
+            else:
+                rep = pending.finalize(reports[offset : offset + len(traces)])
+            # wall_s = own prepare + amortised share of the shared timing
+            # pass + own finalize (comparable to scenario-mode wall_s)
+            wall = prep_wall + sim_share * len(traces) + (time.time() - t_fin)
+            records[i] = _ok_record(rep, gstats, wall)
+            if timing_fallback is not None:
+                records[i]["timing_fallback"] = timing_fallback
+        except Exception:
+            records[i] = _error_record(t_fin - prep_wall)
+        offset += len(traces)
+    return records  # type: ignore[return-value]
 
 
 @dataclasses.dataclass
@@ -128,14 +224,33 @@ class SweepResult:
         )
 
 
+def _chunk_evenly(seq: list, k: int) -> list[list]:
+    """Split into at most k contiguous chunks of near-equal size
+    (contiguity keeps same-spec neighbours — which share graphs and DRAM
+    configs — in the same batch group)."""
+    k = max(1, min(k, len(seq)))
+    size, extra = divmod(len(seq), k)
+    chunks, at = [], 0
+    for i in range(k):
+        end = at + size + (1 if i < extra else 0)
+        chunks.append(seq[at:end])
+        at = end
+    return chunks
+
+
 def run_sweep(
     spec: SweepSpec,
     cache_dir: str | None = None,
     workers: int = 0,
     progress: Callable[[str], None] | None = None,
+    mode: str = "scenario",
 ) -> SweepResult:
     """Execute a sweep spec.  ``workers <= 1`` runs serially in-process;
-    ``workers > 1`` fans scenarios out to a spawn-context process pool."""
+    ``workers > 1`` fans scenarios out to a spawn-context process pool.
+    ``mode="batch"`` groups every chunk's DRAM traces into a few batched
+    device dispatches (identical results, fewer dispatches)."""
+    if mode not in ("scenario", "batch"):
+        raise ValueError(f"unknown mode {mode!r} (use scenario|batch)")
     say = progress or (lambda msg: None)
     scenarios, skipped = spec.expand()
     for sk in skipped:
@@ -170,7 +285,34 @@ def run_sweep(
                 f"({record.get('wall_s', 0):.2f}s)")
 
     unique_pending = list(pending_by_hash)
-    if workers > 1 and len(unique_pending) > 1:
+    if mode == "batch":
+        chunks = _chunk_evenly(unique_pending, workers if workers > 1 else 1)
+        if workers > 1 and len(chunks) > 1:
+            ctx = multiprocessing.get_context("spawn")
+            with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
+                futures = {
+                    pool.submit(execute_scenarios_batch,
+                                [scenarios[pending_by_hash[h][0]] for h in chunk]):
+                    chunk
+                    for chunk in chunks
+                }
+                for fut in as_completed(futures):
+                    chunk = futures[fut]
+                    try:
+                        records = fut.result()
+                    except Exception:  # pool-level failure (broken process)
+                        records = [dict(status="error",
+                                        error=traceback.format_exc(),
+                                        wall_s=0.0)] * len(chunk)
+                    for h, record in zip(chunk, records):
+                        finish(h, record)
+        else:
+            for chunk in chunks:
+                records = execute_scenarios_batch(
+                    [scenarios[pending_by_hash[h][0]] for h in chunk])
+                for h, record in zip(chunk, records):
+                    finish(h, record)
+    elif workers > 1 and len(unique_pending) > 1:
         ctx = multiprocessing.get_context("spawn")
         with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
             futures = {

@@ -14,8 +14,8 @@ from repro.core.trace import Trace
 from repro.graph.generators import rmat, uniform_random
 from repro.kernels.attention.ops import flash_attention
 from repro.kernels.attention.ref import attention_ref
-from repro.kernels.dram_timing.ops import simulate_trace
-from repro.kernels.dram_timing.ref import dram_timing_ref
+from repro.kernels.dram_timing.ops import simulate_trace, simulate_trace_batch
+from repro.kernels.dram_timing.ref import dram_timing_ref, dram_timing_ref_batch
 from repro.kernels.edge_update.ops import relax_step
 from repro.kernels.edge_update.ref import edge_update_ref
 from repro.kernels.spmv.ops import spmv
@@ -104,6 +104,45 @@ def test_dram_timing_kernel_matches_scan(dram, n, block):
     assert out_kernel["hits"] == ref[1]
     assert out_kernel["misses"] == ref[2]
     assert out_kernel["conflicts"] == ref[3]
+
+
+@pytest.mark.parametrize("dram", ["default", "hbm"])
+def test_dram_timing_kernel_batch_matches_single(dram):
+    """The batched kernel (one grid row per trace, one dispatch for all)
+    must agree with per-trace kernel calls and the batched scan oracle."""
+    cfg = dram_config(dram)
+    rng = np.random.default_rng(42)
+    traces = [
+        Trace(np.arange(300, dtype=np.int64), np.zeros(300, dtype=bool)),
+        Trace(rng.integers(0, 1 << 20, size=1000), np.zeros(1000, dtype=bool)),
+        Trace.empty(),
+        Trace(rng.integers(0, 1 << 12, size=77), np.zeros(77, dtype=bool)),
+    ]
+    block = 256
+    batch = simulate_trace_batch(traces, cfg, use_pallas=True, block=block,
+                                 interpret=True)
+    for tr, out in zip(traces, batch):
+        single = simulate_trace(tr, cfg, use_pallas=True, block=block,
+                                interpret=True)
+        assert out == single
+
+    # batched oracle agrees with the batched kernel layout-for-layout
+    L = 1024
+    bank = np.full((len(traces), L), -1, dtype=np.int32)
+    row = np.zeros((len(traces), L), dtype=np.int32)
+    for i, tr in enumerate(traces):
+        if tr.n:
+            bank[i, : tr.n], row[i, : tr.n] = decode(tr.lines, cfg)
+    t = cfg.timing_cycles()
+    ref = np.asarray(dram_timing_ref_batch(
+        bank, row, nbanks=cfg.nbanks, tCL=t["tCL"], tRCD=t["tRCD"],
+        tRP=t["tRP"], tRC=t["tRC"], tBL=t["tBL"], lookahead=16 * t["tBL"]))
+    for i, tr in enumerate(traces):
+        if tr.n:
+            assert batch[i]["cycles"] == ref[i, 0]
+            assert batch[i]["hits"] == ref[i, 1]
+            assert batch[i]["misses"] == ref[i, 2]
+            assert batch[i]["conflicts"] == ref[i, 3]
 
 
 # ---------------------------------------------------------------------------

@@ -215,6 +215,47 @@ def test_duplicate_scenarios_execute_once(tmp_path):
     assert r0["runtime_s"] == r1["runtime_s"]
 
 
+def test_batch_mode_matches_scenario_mode():
+    """Batch execution (cross-scenario grouped DRAM dispatches) must yield
+    byte-identical result rows to per-scenario execution."""
+    spec = tiny_spec(accels=("accugraph", "hitgraph", "thundergp"),
+                     problems=("bfs", "pr"))
+    scenario = run_sweep(spec, mode="scenario")
+    batch = run_sweep(spec, mode="batch")
+    assert result_rows(scenario) == result_rows(batch)
+
+
+def test_batch_mode_error_isolation(tmp_path):
+    spec = tiny_spec(graphs=(BROKEN, TINY))
+    result = run_sweep(spec, cache_dir=str(tmp_path / "cache"), mode="batch")
+    assert result.n_errors == 1 and result.n_executed == 2
+    by_graph = {r.scenario.graph.name: r for r in result.results}
+    assert by_graph["broken"].status == "error"
+    assert "no-such-generator" in by_graph["broken"].record["error"]
+    assert by_graph["tiny"].status == "ok"
+
+
+def test_batch_mode_uses_few_dispatches():
+    from repro.core.engine import dispatch_stats, reset_dispatch_stats
+    from repro.sweep.runner import execute_scenarios_batch
+
+    scenarios = tiny_spec(accels=("accugraph", "foregraph", "thundergp"),
+                          problems=("bfs", "pr")).scenarios()
+    reset_dispatch_stats()
+    records = [execute_scenario(s) for s in scenarios]
+    n_seq = dispatch_stats()["dispatches"]
+    reset_dispatch_stats()
+    records_b = execute_scenarios_batch(scenarios)
+    n_bat = dispatch_stats()["dispatches"]
+    assert [r["report"] for r in records] == [r["report"] for r in records_b]
+    assert n_bat * 5 <= n_seq  # the acceptance-criterion floor
+
+
+def test_run_sweep_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown mode"):
+        run_sweep(tiny_spec(), mode="warp")
+
+
 @pytest.mark.slow
 def test_parallel_matches_serial_byte_identical(tmp_path):
     spec = tiny_spec(accels=("accugraph", "foregraph", "thundergp"),

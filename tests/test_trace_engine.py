@@ -62,6 +62,59 @@ def test_proportional_interleave_preserves_order_and_length():
     assert np.all(np.diff(m.lines[m.is_write]) > 0)
 
 
+# ---------------- combinator edge cases ----------------
+
+
+def test_round_robin_unequal_lengths():
+    a = Trace(np.array([1, 2, 3, 4, 5]), np.zeros(5, dtype=bool))
+    b = Trace(np.array([10, 20]), np.zeros(2, dtype=bool))
+    rr = round_robin(a, b)
+    # 1:1 merge while both streams last; the longer stream's tail follows
+    assert rr.lines.tolist() == [1, 10, 2, 20, 3, 4, 5]
+
+
+def test_round_robin_single_stream_is_identity():
+    a = Trace(np.array([7, 3, 9]), np.array([False, True, False]))
+    rr = round_robin(a)
+    assert rr.lines.tolist() == [7, 3, 9]
+    assert rr.is_write.tolist() == [False, True, False]
+
+
+def test_round_robin_drops_empty_streams():
+    a = Trace(np.array([1, 2]), np.zeros(2, dtype=bool))
+    rr = round_robin(Trace.empty(), a, Trace.empty())
+    assert rr.lines.tolist() == [1, 2]
+    assert round_robin(Trace.empty(), Trace.empty()).n == 0
+
+
+def test_proportional_interleave_single_stream_is_identity():
+    a = Trace(np.array([5, 1, 8, 2]), np.zeros(4, dtype=bool))
+    m = proportional_interleave(a)
+    assert m.lines.tolist() == [5, 1, 8, 2]
+
+
+def test_proportional_interleave_empty_streams():
+    a = Trace(np.arange(10), np.zeros(10, dtype=bool))
+    m = proportional_interleave(Trace.empty(), a)
+    assert m.lines.tolist() == list(range(10))
+    assert proportional_interleave(Trace.empty()).n == 0
+
+
+def test_coalesce_does_not_merge_across_read_write_boundary():
+    # same line, but a read followed by a write (or vice versa) must both
+    # survive: the filter abstraction merges only same-kind adjacency
+    t = Trace(np.array([4, 4, 4, 4]), np.array([False, True, True, False]))
+    c = coalesce(t)
+    assert c.lines.tolist() == [4, 4, 4]
+    assert c.is_write.tolist() == [False, True, False]
+
+
+def test_coalesce_empty_and_single():
+    assert coalesce(Trace.empty()).n == 0
+    one = Trace(np.array([3]), np.ones(1, dtype=bool))
+    assert coalesce(one).lines.tolist() == [3]
+
+
 def test_memory_layout_rows_do_not_overlap():
     lay = MemoryLayout()
     a = lay.alloc("a", 100)
