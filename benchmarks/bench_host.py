@@ -1,0 +1,191 @@
+"""Host-pipeline throughput bench: sequential vs overhauled preprocessing.
+
+The DRAM timing engine batches down to a handful of device dispatches
+(BENCH_engine.json), so sweep wall time is dominated by the *host* half the
+paper calls offline preprocessing: graph generation, partitioning, semantic
+execution and trace assembly.  This bench times that half two ways on a
+tab4-style chunk swept across memory technologies (DDR3 / DDR4 / HBM — the
+paper's Tab. 6 axis):
+
+- **sequential-host** — eager trace combinators (every ``concat`` /
+  ``interleave`` materialises a copy) and no artifact reuse: every scenario
+  regenerates its partitions, routing and traces, as the pre-overhaul
+  pipeline did,
+- **overhauled** — the lazy trace IR (traces materialise once, into the
+  engine's padded batch buffers) plus the in-process host caches: partition
+  indices and semantic executions are shared across scenarios that differ
+  only in the accelerator or DRAM axes.
+
+Both variants must produce byte-identical traces (sha256 over every
+scenario's request streams — the golden trace hashes) and identical
+``SimReport`` s (asserted on every run).  Wall breakdown (host prepare vs
+device timing vs finalize) is written to ``BENCH_host.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_host               # tab4 chunk
+    PYTHONPATH=src python -m benchmarks.bench_host --tiny        # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import time
+
+from repro.core import hostcache
+from repro.core.accelerators import ACCELERATORS
+from repro.core.engine import simulate_many
+from repro.core.trace import eager_traces, materialize
+from repro.graph.problems import PROBLEMS
+from repro.sweep.spec import SweepSpec
+
+DRAM_AXIS = ("ddr3", "default", "hbm")
+
+
+def _build_spec(args) -> SweepSpec:
+    if args.tiny:
+        from repro.graph.generators import GraphSpec
+
+        return SweepSpec(
+            name="bench-host-tiny",
+            accelerators=tuple(ACCELERATORS),  # all four: trace-hash coverage
+            graphs=(GraphSpec("tiny", "uniform", 256, 1024, True, 1, 0),),
+            problems=("bfs",),
+            drams=("default", "hbm"),
+        )
+    return SweepSpec(
+        name="bench-tab4",
+        accelerators=tuple(x for x in args.accels.split(",") if x),
+        graphs=tuple(x for x in args.graphs.split(",") if x),
+        problems=tuple(x for x in args.problems.split(",") if x),
+        drams=DRAM_AXIS,
+    )
+
+
+def _run_chunk(scenarios) -> tuple[list, dict, list[str]]:
+    """Execute every scenario's host half, time the chunk's traces in one
+    grouped pass, finalize.  Returns (reports, wall breakdown, trace
+    hashes).  Caller controls trace mode / cache state."""
+    from repro.sweep.runner import _graph
+
+    t0 = time.time()
+    pendings = []
+    for s in scenarios:
+        g = _graph(s.graph)
+        accel = ACCELERATORS[s.accelerator](s.config)
+        pendings.append(accel.prepare(g, PROBLEMS[s.problem], root=s.root,
+                                      dram=s.dram))
+    traces = [p.traces() for p in pendings]
+    host_wall = time.time() - t0
+
+    t1 = time.time()
+    items = []
+    for p, trs in zip(pendings, traces):
+        items += [(tr, p.dram, p.config.engine, p.config.scan_cutoff)
+                  for tr in trs]
+    flat_reports = simulate_many(items)
+    device_wall = time.time() - t1
+
+    t2 = time.time()
+    reports, at = [], 0
+    for p, trs in zip(pendings, traces):
+        reports.append(p.finalize(flat_reports[at : at + len(trs)]))
+        at += len(trs)
+    finalize_wall = time.time() - t2
+
+    hashes = []
+    for trs in traces:
+        h = hashlib.sha256()
+        for tr in trs:
+            m = materialize(tr)
+            h.update(m.lines.tobytes())
+            h.update(m.is_write.tobytes())
+        hashes.append(h.hexdigest())
+
+    walls = dict(
+        host_prepare_s=round(host_wall, 4),
+        device_timing_s=round(device_wall, 4),
+        finalize_s=round(finalize_wall, 4),
+        total_s=round(host_wall + device_wall + finalize_wall, 4),
+        traces=len(items),
+        requests=sum(tr.n for tr, *_ in items),
+    )
+    return reports, walls, hashes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--graphs", default="sd,db",
+                    help="graph suite keys for the tab4-style chunk")
+    ap.add_argument("--accels", default=",".join(ACCELERATORS))
+    ap.add_argument("--problems", default="bfs,pr")
+    ap.add_argument("--out", default="BENCH_host.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: all 4 accelerators x 1 tiny graph x bfs")
+    args = ap.parse_args(argv)
+
+    spec = _build_spec(args)
+    scenarios = spec.scenarios()
+    print(f"[bench_host] {spec.name}: {len(scenarios)} scenarios "
+          f"({len(spec.accelerators)} accels x {len(spec.graphs)} graphs x "
+          f"{len(spec.problems)} problems x {len(spec.drams)} drams)")
+
+    # each variant is run twice and measured on the second pass: the two
+    # variants batch different (B, L) shapes (deduplication shrinks the
+    # batch axis), so each must warm its own JIT buckets
+    print("  sequential-host (eager combinators, no artifact reuse) ...")
+    with eager_traces(), hostcache.disabled():
+        hostcache.clear_all()
+        _run_chunk(scenarios)
+        hostcache.clear_all()
+        seq_reports, seq, seq_hashes = _run_chunk(scenarios)
+    print(f"    host {seq['host_prepare_s']:.3f}s + device "
+          f"{seq['device_timing_s']:.3f}s = {seq['total_s']:.3f}s")
+
+    print("  overhauled (lazy trace IR + host artifact caches) ...")
+    hostcache.clear_all()
+    _run_chunk(scenarios)
+    hostcache.clear_all()
+    new_reports, new, new_hashes = _run_chunk(scenarios)
+    cache = hostcache.stats_all()
+    print(f"    host {new['host_prepare_s']:.3f}s + device "
+          f"{new['device_timing_s']:.3f}s = {new['total_s']:.3f}s")
+
+    traces_identical = seq_hashes == new_hashes
+    assert traces_identical, "lazy trace IR diverged from the eager oracle"
+    report_mismatches = sum(
+        a.timing != b.timing or a.iterations != b.iterations
+        for a, b in zip(seq_reports, new_reports))
+    assert report_mismatches == 0, (
+        f"{report_mismatches}/{len(scenarios)} SimReports diverged")
+    print(f"  equivalence: {len(scenarios)}/{len(scenarios)} trace hashes + "
+          f"reports identical")
+
+    result = dict(
+        workload=dict(
+            name=spec.name,
+            scenarios=len(scenarios),
+            traces=new["traces"],
+            requests=new["requests"],
+            drams=list(spec.drams),
+        ),
+        sequential_host=seq,
+        overhauled=new,
+        host_speedup=round(
+            seq["host_prepare_s"] / max(new["host_prepare_s"], 1e-9), 2),
+        wall_speedup=round(seq["total_s"] / max(new["total_s"], 1e-9), 2),
+        host_cache=cache,
+        traces_identical=True,
+        reports_identical=True,
+        golden_trace_hashes={
+            s.scenario_id: h[:16] for s, h in zip(scenarios, new_hashes)
+        },
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"  wrote {args.out} (host speedup {result['host_speedup']}x, "
+          f"end-to-end {result['wall_speedup']}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

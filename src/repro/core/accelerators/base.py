@@ -26,6 +26,7 @@ from repro.core.engine import (
     simulate_batch,
     simulate_sequential,
 )
+from repro.core.hostcache import ARTIFACTS, SEMANTICS
 from repro.core.metrics import IterationStats, SimReport
 from repro.core.trace import Trace
 from repro.graph.problems import Problem
@@ -54,6 +55,22 @@ class AccelConfig:
 
     def has(self, opt: str) -> bool:
         return "all" in self.optimizations or opt in self.optimizations
+
+    # Fields that only affect DRAM timing, never the semantic execution;
+    # every OTHER field (including ones added later) splits the semantic
+    # cache, so a new semantics-relevant knob can never alias stale entries.
+    _TIMING_ONLY_FIELDS = ("engine", "scan_cutoff")
+
+    def semantic_key(self) -> tuple:
+        """The config fields that determine a semantic execution (values,
+        iterations, traces) — everything except the DRAM timing knobs."""
+        key = []
+        for f in dataclasses.fields(self):
+            if f.name in self._TIMING_ONLY_FIELDS:
+                continue
+            v = getattr(self, f.name)
+            key.append(tuple(sorted(v)) if isinstance(v, frozenset) else v)
+        return tuple(key)
 
 
 @dataclasses.dataclass
@@ -208,14 +225,32 @@ class Accelerator(abc.ABC):
     ) -> PendingRun:
         """Run the semantic half (trace assembly) only; the returned
         :class:`PendingRun` carries everything ``finalize`` needs once the
-        DRAM timing reports exist."""
+        DRAM timing reports exist.
+
+        Both halves of the host preprocessing are cached per process: the
+        prepared (symmetrised/weighted) graph by content fingerprint, and
+        the whole semantic execution by (graph, problem, root, semantic
+        config) — it is DRAM-independent, so a DDR3/DDR4/HBM sweep of one
+        scenario assembles traces once."""
         if problem.needs_weights and not self.supports_weights:
             raise ValueError(f"{self.name} does not support weighted problems")
         if isinstance(dram, str):
             dram = dram_config(dram)
         dram = dram or dram_config(self.default_dram)
-        gp = problem.prepare_graph(g)
-        values, iters, pt, stats = self._execute(gp, problem, root)
+        gp = ARTIFACTS.get_or_build(
+            (g.fingerprint, "prepared", problem.name),
+            lambda: problem.prepare_graph(g),
+        )
+        values, iters, pt, stats = SEMANTICS.get_or_build(
+            (gp.fingerprint, self.name, problem.name, root,
+             self.config.semantic_key()),
+            lambda: self._execute(gp, problem, root),
+        )
+        # hand out copies of the mutable pieces: a caller mutating
+        # report.values or an IterationStats must not corrupt the cached
+        # execution (the PhasedTrace is shared — trace nodes are immutable)
+        values = values.copy()
+        stats = [dataclasses.replace(s) for s in stats]
         return PendingRun(
             accelerator=self.name,
             graph=g.name,

@@ -26,8 +26,10 @@ import numpy as np
 
 from repro.core.accelerators.base import (
     Accelerator,
+    INF,
     PhasedTrace,
 )
+from repro.core.hostcache import ARTIFACTS
 from repro.core.memory_layout import MemoryLayout
 from repro.core.metrics import IterationStats
 from repro.core.trace import (
@@ -71,7 +73,20 @@ class ForeGraph(Accelerator):
         q = shards.q
         layout = MemoryLayout()
         layout.alloc("values", g.n * 4)
-        sizes = shards.shard_sizes()
+        # Static shard state, hoisted out of the iteration loop: sizes and
+        # the gathered per-shard endpoint arrays (only non-empty shards).
+        sizes, shard_edges = ARTIFACTS.get_or_build(
+            (g.fingerprint, "foregraph.prep", interval),
+            lambda: (
+                shards.shard_sizes(),
+                {
+                    (i, j): shards.shard(i, j)
+                    for i in range(q)
+                    for j in range(q)
+                    if len(shards.shard_edge_idx[i][j])
+                },
+            ),
+        )
         for i in range(q):
             for j in range(q):
                 if sizes[i, j]:
@@ -122,16 +137,20 @@ class ForeGraph(Accelerator):
                         continue
                     pad = max(int(sizes[i, j]) for j in group) if shuffle else 0
                     for j in group:
-                        src, dst = shards.shard(i, j)
+                        src, dst = shard_edges[(i, j)]
                         lo_j, hi_j = shards.interval(j)
-                        # --- semantics (immediate across shards) ---
+                        # --- semantics (immediate across shards; the shard
+                        # only updates destination interval j, so the
+                        # accumulation scratch is interval-local) ---
                         sv = (snapshot if problem.kind == "acc" else values)[src]
                         if problem.kind == "min":
                             cand = problem.edge_candidates_np(sv)
-                            acc = problem.accumulate_np(cand, dst, g.n)
-                            new = np.minimum(values, acc)
-                            changed = (new < values).nonzero()[0]
-                            values = new
+                            acc = np.full(hi_j - lo_j, INF, dtype=np.float32)
+                            np.minimum.at(acc, dst - lo_j, cand)
+                            old = values[lo_j:hi_j]
+                            nv = np.minimum(old, acc)
+                            changed = (nv < old).nonzero()[0] + lo_j
+                            values[lo_j:hi_j] = nv
                             if len(changed):
                                 any_change = True
                                 dirty[np.unique(changed // interval)] = True
@@ -140,9 +159,10 @@ class ForeGraph(Accelerator):
                                 sv, None,
                                 src_deg[src] if src_deg is not None else None,
                             )
-                            acc = problem.accumulate_np(cand, dst, g.n)
+                            acc = np.zeros(hi_j - lo_j, dtype=np.float32)
+                            np.add.at(acc, dst - lo_j, cand)
                             scale = 0.85 if problem.name == "pr" else 1.0
-                            values = values + np.float32(scale) * acc
+                            values[lo_j:hi_j] += np.float32(scale) * acc
 
                         # --- trace (all sequential) ---
                         n_edges = pad if shuffle else int(sizes[i, j])

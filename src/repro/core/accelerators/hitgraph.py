@@ -32,6 +32,7 @@ from repro.core.accelerators.base import (
     INF,
     PhasedTrace,
 )
+from repro.core.hostcache import ARTIFACTS
 from repro.core.memory_layout import MemoryLayout
 from repro.core.metrics import IterationStats
 from repro.core.trace import (
@@ -42,7 +43,7 @@ from repro.core.trace import (
     seq_read,
     seq_write,
 )
-from repro.graph.partition import horizontal_partition
+from repro.graph.partition import horizontal_partition, interval_routing
 from repro.graph.problems import Problem
 from repro.graph.structure import Graph
 
@@ -53,29 +54,46 @@ class HitGraph(Accelerator):
     supports_weights = True
     supports_multichannel = True
 
+    @staticmethod
+    def _partition_prep(g: Graph, idx: np.ndarray, k: int, interval_size: int,
+                        sort_opt: bool, weighted: bool):
+        """Static per-partition state: endpoint arrays (destination-sorted
+        when edge sorting is on) and the crossbar routing — a stable
+        grouping of the partition's edges by destination interval, computed
+        once and reused every iteration."""
+        if sort_opt:
+            idx = idx[np.argsort(g.dst[idx], kind="stable")]
+        src, dst = g.src[idx], g.dst[idx]
+        w = g.weights[idx] if weighted else None
+        route, jb = interval_routing(dst, k, interval_size)
+        return dict(n_edges=len(idx), src=src, dst=dst, w=w, route=route, jb=jb)
+
     def _execute(self, g: Graph, problem: Problem, root: int):
         cfg = self.config
         p = max(cfg.n_pes, 1)  # PEs == channels
         parts = horizontal_partition(g, cfg.interval_size, by="src")
         k = parts.k
-        edge_bytes = 12 if (g.weighted and problem.needs_weights) else 8
+        weighted = bool(g.weighted and problem.needs_weights)
+        edge_bytes = 12 if weighted else 8
 
         sort_opt = cfg.has("edge_sorting")
         combine_opt = cfg.has("update_combining") and sort_opt
         filter_opt = cfg.has("update_filtering") and problem.kind == "min"
         skip_opt = cfg.has("partition_skipping") and problem.kind == "min"
 
+        prep = ARTIFACTS.get_or_build(
+            (g.fingerprint, "hitgraph.prep", cfg.interval_size, sort_opt, weighted),
+            lambda: [self._partition_prep(g, parts.edge_idx[i], k,
+                                          cfg.interval_size, sort_opt, weighted)
+                     for i in range(k)],
+        )
+
         # Channel-local layouts; partition i lives on channel i % p.
         layouts = [MemoryLayout() for _ in range(p)]
-        part_edges = []
         for i in range(k):
-            idx = parts.edge_idx[i]
-            if sort_opt:
-                idx = idx[np.argsort(g.dst[idx], kind="stable")]
-            part_edges.append(idx)
             ch = i % p
             layouts[ch].alloc(f"vals{i}", (parts.interval(i)[1] - parts.interval(i)[0]) * 4)
-            layouts[ch].alloc(f"edges{i}", max(len(idx), 1) * edge_bytes)
+            layouts[ch].alloc(f"edges{i}", max(prep[i]["n_edges"], 1) * edge_bytes)
         for j in range(k):
             # update queue for destination partition j (written by all PEs)
             layouts[j % p].alloc(f"upd{j}", max(g.m, 1) * 8)
@@ -103,49 +121,57 @@ class HitGraph(Accelerator):
                     st.partitions_skipped += 1
                     continue
                 ch = i % p
-                idx = part_edges[i]
-                src, dst = g.src[idx], g.dst[idx]
-                w = g.weights[idx] if (g.weighted and problem.needs_weights) else None
+                pi = prep[i]
+                src, dst, w = pi["src"], pi["dst"], pi["w"]
                 lo, hi = parts.interval(i)
 
+                # Crossbar routing: the static stable grouping by
+                # destination interval (``route``/``jb``) is precomputed;
+                # with filtering only the kept-edge mask is applied per
+                # iteration (order within each interval is preserved, so
+                # the routed streams equal a fresh per-iteration sort).
                 if filter_opt:
                     keep = active[src]
-                    src_k, dst_k = src[keep], dst[keep]
-                    w_k = w[keep] if w is not None else None
+                    mask_sorted = keep[pi["route"]]
+                    routed = pi["route"][mask_sorted]
+                    csum = np.concatenate(
+                        ([0], np.cumsum(mask_sorted, dtype=np.int64)))
+                    jb = csum[pi["jb"]]
                 else:
-                    src_k, dst_k, w_k = src, dst, w
+                    routed, jb = pi["route"], pi["jb"]
 
+                src_r, dst_r = src[routed], dst[routed]
+                w_r = w[routed] if w is not None else None
                 cand = problem.edge_candidates_np(
-                    values[src_k], w_k,
-                    src_deg[src_k] if src_deg is not None else None)
+                    values[src_r], w_r,
+                    src_deg[src_r] if src_deg is not None else None)
                 # route updates to destination partitions
-                if len(dst_k):
-                    jkey = dst_k // cfg.interval_size
-                    order = np.argsort(jkey, kind="stable")
-                    jb = np.searchsorted(jkey[order], np.arange(k + 1))
-                    for j in range(k):
-                        sl = order[jb[j] : jb[j + 1]]
-                        if not len(sl):
-                            continue
-                        d, v = dst_k[sl], cand[sl]
-                        if combine_opt:
-                            # combine updates with equal destination
-                            if problem.kind == "min":
-                                acc = np.full(g.n, INF, dtype=np.float32)
-                                np.minimum.at(acc, d, v)
-                            else:
-                                acc = np.zeros(g.n, dtype=np.float32)
-                                np.add.at(acc, d, v)
-                            d = np.unique(d)
-                            v = acc[d]
-                        upd_dst[j].append(d)
-                        upd_val[j].append(v)
+                for j in range(k):
+                    b0, b1 = jb[j], jb[j + 1]
+                    if b0 == b1:
+                        continue
+                    d, v = dst_r[b0:b1], cand[b0:b1]
+                    if combine_opt:
+                        # combine updates with equal destination
+                        # (interval-local scratch: partition j's updates
+                        # only touch its own vertex interval)
+                        jlo, jhi = parts.interval(j)
+                        if problem.kind == "min":
+                            acc = np.full(jhi - jlo, INF, dtype=np.float32)
+                            np.minimum.at(acc, d - jlo, v)
+                        else:
+                            acc = np.zeros(jhi - jlo, dtype=np.float32)
+                            np.add.at(acc, d - jlo, v)
+                        d = np.unique(d)
+                        v = acc[d - jlo]
+                    upd_dst[j].append(d)
+                    upd_val[j].append(v)
 
                 # trace: prefetch -> edges -> update writes (concurrent)
                 pre = seq_read(layouts[ch].base(f"vals{i}"), (hi - lo) * 4)
-                edges_tr = seq_read(layouts[ch].base(f"edges{i}"), len(idx) * edge_bytes)
+                edges_tr = seq_read(layouts[ch].base(f"edges{i}"), pi["n_edges"] * edge_bytes)
                 st.values_read += hi - lo
-                st.edges_read += len(idx)
+                st.edges_read += pi["n_edges"]
                 scatter_traces[ch].append(concat(pre, edges_tr))
 
             # update-queue writes happen on the owning channel, sequential
@@ -183,11 +209,14 @@ class HitGraph(Accelerator):
                 v = np.concatenate(upd_val[j])
                 st.updates_read += len(d)
                 if problem.kind == "min":
-                    acc = np.full(g.n, INF, dtype=np.float32)
-                    np.minimum.at(acc, d, v)
-                    nv = np.minimum(new_values, acc)
-                    changed = (nv < new_values).nonzero()[0]
-                    new_values = nv
+                    # interval-local apply: partition j's updates only touch
+                    # vertices in [lo, hi)
+                    acc = np.full(hi - lo, INF, dtype=np.float32)
+                    np.minimum.at(acc, d - lo, v)
+                    old = new_values[lo:hi]
+                    nv = np.minimum(old, acc)
+                    changed = (nv < old).nonzero()[0] + lo
+                    new_values[lo:hi] = nv
                     changed_global[changed] = True
                     if len(changed):
                         any_change = True
@@ -197,11 +226,12 @@ class HitGraph(Accelerator):
 
                 pre = seq_read(layouts[ch].base(f"vals{j}"), (hi - lo) * 4)
                 upd_rd = seq_read(layouts[ch].base(f"upd{j}"), int(upd_q_len[j]) * 8)
-                # value writes: in update order (sorted by dst when Sort. on)
-                wr_idx = changed if problem.kind == "min" else changed
-                writes = random_write(layouts[ch].base(f"vals{j}"), wr_idx - lo, 4)
+                # value writes (filter abstraction): "min" writes the values
+                # an update actually lowered, "acc" writes every accumulated
+                # destination — both are exactly ``changed``
+                writes = random_write(layouts[ch].base(f"vals{j}"), changed - lo, 4)
                 st.values_read += hi - lo
-                st.values_written += len(wr_idx)
+                st.values_written += len(changed)
                 gtr[ch].append(concat(pre, proportional_interleave(upd_rd, writes)))
             gather_phase = [concat(*trs) if trs else Trace.empty() for trs in gtr]
             pt.add_phase(gather_phase)

@@ -18,14 +18,60 @@ The combinators mirror the paper's Sect. 2.2 / 3.2 abstractions:
   disruption from switching streams — the effect under study — is kept).
 - ``concat``: sequential phases (e.g. prefetch completes before edge
   reading starts, per the control-flow dependencies in Figs. 4-7).
+
+Two evaluation strategies share one combinator API:
+
+- **Eager** (:class:`Trace`): every combinator materialises its result
+  immediately.  This is the historical path and the equivalence oracle.
+- **Lazy** (:class:`LazyTrace`, the default): ``seq_read``/``seq_write``
+  become O(1) *range* nodes and the combinators become expression nodes; a
+  trace is materialised exactly once — by the timing engine, directly into
+  the padded ``[B, L]`` batch buffers (``emit_bank_row``) — instead of being
+  copied once per combinator level.  Lengths and byte counts are available
+  without materialisation, so the accelerator iteration loops never touch
+  request arrays.  Lazy and eager composition produce byte-identical
+  request streams (the merge orders are computed by shared helpers from
+  stream *lengths* only).
+
+``set_lazy`` / ``eager_traces`` switch the strategy; benchmarks use the
+eager mode as the host-pipeline baseline.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import hashlib
 
 import numpy as np
 
 LINE = 64
+
+# Evaluation strategy of the combinators below: True builds LazyTrace
+# expression nodes (materialised once, by the engine), False materialises
+# every combinator eagerly (the historical oracle path).
+_LAZY = True
+
+
+def lazy_enabled() -> bool:
+    return _LAZY
+
+
+def set_lazy(enabled: bool) -> None:
+    global _LAZY
+    _LAZY = bool(enabled)
+
+
+@contextlib.contextmanager
+def eager_traces():
+    """Run trace assembly with eager (immediately materialised) combinators
+    — the equivalence oracle and the pre-lazy-IR benchmark baseline."""
+    global _LAZY
+    prev = _LAZY
+    _LAZY = False
+    try:
+        yield
+    finally:
+        _LAZY = prev
 
 
 @dataclasses.dataclass
@@ -61,6 +107,257 @@ class Trace:
         return Trace(np.zeros(0, dtype=np.int64), np.zeros(0, dtype=bool))
 
 
+# ---------------------------------------------------------------------------
+# lazy trace IR
+# ---------------------------------------------------------------------------
+
+
+class LazyTrace:
+    """A deferred request stream: knows its length and write count in O(1)
+    and can emit its lines / write flags into caller-provided buffers in one
+    pass.  Duck-types the read-only surface of :class:`Trace` (``n``,
+    ``bytes``, ``lines``, ``is_write``) by materialising on demand."""
+
+    __slots__ = ("_n", "_wn", "_mat", "_skey")
+
+    def __init__(self, n: int, wn: int):
+        self._n = int(n)
+        self._wn = int(wn)
+        self._mat: Trace | None = None
+        self._skey = None
+
+    def structural_key(self):
+        """A hashable key that uniquely determines this node's request
+        stream (cached).  Structurally-identical traces — e.g. the static
+        streams an accelerator re-emits every iteration — share keys, which
+        lets the timing engine simulate each unique (stream, timing-config)
+        pair once."""
+        if self._skey is None:
+            self._skey = self._structural_key()
+        return self._skey
+
+    def _structural_key(self):
+        raise NotImplementedError
+
+    # ---- O(1) accounting ----
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def bytes(self) -> int:
+        return self._n * LINE
+
+    @property
+    def read_bytes(self) -> int:
+        return (self._n - self._wn) * LINE
+
+    @property
+    def write_bytes(self) -> int:
+        return self._wn * LINE
+
+    # ---- materialisation (oracle / compat path; the engine uses emit_*) ----
+    def materialize(self) -> Trace:
+        if self._mat is None:
+            lines = np.empty(self._n, dtype=np.int64)
+            wr = np.empty(self._n, dtype=bool)
+            self.emit_lines(lines)
+            self.emit_writes(wr)
+            self._mat = Trace(lines, wr)
+        return self._mat
+
+    @property
+    def lines(self) -> np.ndarray:
+        return self.materialize().lines
+
+    @property
+    def is_write(self) -> np.ndarray:
+        return self.materialize().is_write
+
+    # ---- single-pass emission ----
+    def emit_lines(self, out: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def emit_writes(self, out: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def emit_bank_row(self, bank_out: np.ndarray, row_out: np.ndarray,
+                      lines_per_row: int, nbanks: int,
+                      scratch: np.ndarray | None = None) -> None:
+        """Decode this trace's lines straight into ``[L]`` bank/row buffer
+        slices (the fused flatten+pack path of ``TraceBatch``).  ``scratch``
+        is an optional reusable int64 buffer of length >= n."""
+        if scratch is None or len(scratch) < self._n:
+            scratch = np.empty(self._n, dtype=np.int64)
+        lines = scratch[: self._n]
+        self.emit_lines(lines)
+        q = lines // lines_per_row
+        np.remainder(q, nbanks, out=q)
+        bank_out[:] = q
+        np.floor_divide(lines, lines_per_row * nbanks, out=lines)
+        row_out[:] = lines
+
+
+class _RangeLeaf(LazyTrace):
+    """seq_read / seq_write: a contiguous, uniform-kind line range."""
+
+    __slots__ = ("first", "is_write_flag")
+
+    def __init__(self, first: int, count: int, is_write: bool):
+        super().__init__(count, count if is_write else 0)
+        self.first = int(first)
+        self.is_write_flag = bool(is_write)
+
+    def emit_lines(self, out: np.ndarray) -> None:
+        out[:] = np.arange(self.first, self.first + self._n, dtype=np.int64)
+
+    def emit_writes(self, out: np.ndarray) -> None:
+        out[:] = self.is_write_flag
+
+    def _structural_key(self):
+        return ("R", self.first, self._n, self.is_write_flag)
+
+
+class _EagerLeaf(LazyTrace):
+    """An already-materialised trace embedded in a lazy expression (random
+    reads/writes, coalesced streams, literal ``Trace`` inputs)."""
+
+    __slots__ = ("trace",)
+
+    def __init__(self, trace: Trace):
+        super().__init__(trace.n, int(trace.is_write.sum()))
+        self.trace = trace
+        self._mat = trace
+
+    def emit_lines(self, out: np.ndarray) -> None:
+        out[:] = self.trace.lines
+
+    def emit_writes(self, out: np.ndarray) -> None:
+        out[:] = self.trace.is_write
+
+    def _structural_key(self):
+        h = hashlib.sha256(self.trace.lines.tobytes())
+        h.update(self.trace.is_write.tobytes())
+        return ("E", h.digest())
+
+
+class _Concat(LazyTrace):
+    """Sequential composition; nested concats are spliced flat so emission
+    is a single walk over leaf blocks."""
+
+    __slots__ = ("children",)
+
+    def __init__(self, children: list):
+        flat: list[LazyTrace] = []
+        for c in children:
+            if isinstance(c, _Concat):
+                flat.extend(c.children)
+            else:
+                flat.append(c)
+        super().__init__(sum(c.n for c in flat), sum(c._wn for c in flat))
+        self.children = flat
+
+    def _emit(self, out: np.ndarray, field: str) -> None:
+        at = 0
+        for c in self.children:
+            getattr(c, field)(out[at : at + c.n])
+            at += c.n
+
+    def emit_lines(self, out: np.ndarray) -> None:
+        self._emit(out, "emit_lines")
+
+    def emit_writes(self, out: np.ndarray) -> None:
+        self._emit(out, "emit_writes")
+
+    def _structural_key(self):
+        return ("C", tuple(c.structural_key() for c in self.children))
+
+
+class _Merge(LazyTrace):
+    """round_robin / proportional_interleave: children are emitted into a
+    contiguous scratch and gathered through a permutation computed from the
+    child *lengths* only (cached across emissions — the same merge node is
+    packed once per simulated channel but ordered once)."""
+
+    __slots__ = ("children", "kind", "_order")
+
+    def __init__(self, children: list, kind: str):
+        super().__init__(sum(c.n for c in children),
+                         sum(c._wn for c in children))
+        self.children = children
+        self.kind = kind  # "rr" | "prop"
+        self._order: np.ndarray | None = None
+
+    def order(self) -> np.ndarray:
+        if self._order is None:
+            lengths = [c.n for c in self.children]
+            self._order = (_round_robin_order(lengths) if self.kind == "rr"
+                           else _proportional_order(lengths))
+        return self._order
+
+    def _emit(self, out: np.ndarray, field: str, dtype) -> None:
+        scratch = np.empty(self._n, dtype=dtype)
+        at = 0
+        for c in self.children:
+            getattr(c, field)(scratch[at : at + c.n])
+            at += c.n
+        np.take(scratch, self.order(), out=out)
+
+    def emit_lines(self, out: np.ndarray) -> None:
+        self._emit(out, "emit_lines", np.int64)
+
+    def emit_writes(self, out: np.ndarray) -> None:
+        self._emit(out, "emit_writes", bool)
+
+    def _structural_key(self):
+        return ("M", self.kind,
+                tuple(c.structural_key() for c in self.children))
+
+
+def _as_lazy(t) -> LazyTrace:
+    return t if isinstance(t, LazyTrace) else _EagerLeaf(t)
+
+
+def materialize(t) -> Trace:
+    """Eager view of any trace (identity on :class:`Trace`)."""
+    return t.materialize() if isinstance(t, LazyTrace) else t
+
+
+# ---------------------------------------------------------------------------
+# merge-order helpers (shared by the eager and lazy paths, so both produce
+# byte-identical streams by construction)
+# ---------------------------------------------------------------------------
+
+
+def _round_robin_order(lengths: list[int]) -> np.ndarray:
+    """Positions of a 1:1 merge: stream i's j-th request at virtual time
+    j*k + i; requests beyond the shortest stream follow."""
+    k = len(lengths)
+    pos = np.concatenate(
+        [np.arange(n, dtype=np.float64) * k + i for i, n in enumerate(lengths)]
+    )
+    return np.argsort(pos, kind="stable")
+
+
+def _proportional_order(lengths: list[int]) -> np.ndarray:
+    """Positions of a rate-proportional merge: stream i's j-th request at
+    virtual time (j + 0.5) / len_i, ties broken by stream index via
+    ``np.lexsort`` (exact — the previous ``i * 1e-12`` float tie-break
+    reordered long streams once position gaps fell below the epsilon)."""
+    pos = np.concatenate(
+        [(np.arange(n, dtype=np.float64) + 0.5) / n for n in lengths]
+    )
+    sub = np.concatenate(
+        [np.full(n, i, dtype=np.int32) for i, n in enumerate(lengths)]
+    )
+    return np.lexsort((sub, pos))
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+
 def _lines_for_span(base: int, nbytes: int) -> np.ndarray:
     """Cache lines touched by a sequential [base, base+nbytes) access."""
     if nbytes <= 0:
@@ -70,12 +367,26 @@ def _lines_for_span(base: int, nbytes: int) -> np.ndarray:
     return np.arange(first, last + 1, dtype=np.int64)
 
 
-def seq_read(base: int, nbytes: int) -> Trace:
+def _span_range(base: int, nbytes: int) -> tuple[int, int]:
+    if nbytes <= 0:
+        return 0, 0
+    first = base // LINE
+    last = (base + nbytes - 1) // LINE
+    return first, last - first + 1
+
+
+def seq_read(base: int, nbytes: int):
+    if _LAZY:
+        first, count = _span_range(base, nbytes)
+        return _RangeLeaf(first, count, False)
     lines = _lines_for_span(base, nbytes)
     return Trace(lines, np.zeros(len(lines), dtype=bool))
 
 
-def seq_write(base: int, nbytes: int) -> Trace:
+def seq_write(base: int, nbytes: int):
+    if _LAZY:
+        first, count = _span_range(base, nbytes)
+        return _RangeLeaf(first, count, True)
     lines = _lines_for_span(base, nbytes)
     return Trace(lines, np.ones(len(lines), dtype=bool))
 
@@ -85,20 +396,26 @@ def _random_lines(base: int, indices: np.ndarray, width: int) -> np.ndarray:
     return addr // LINE
 
 
-def random_read(base: int, indices: np.ndarray, width: int, coalesced: bool = True) -> Trace:
+def random_read(base: int, indices: np.ndarray, width: int, coalesced: bool = True):
     lines = _random_lines(base, indices, width)
     t = Trace(lines, np.zeros(len(lines), dtype=bool))
-    return coalesce(t) if coalesced else t
+    t = _coalesce_eager(t) if coalesced else t
+    return _EagerLeaf(t) if _LAZY else t
 
 
-def random_write(base: int, indices: np.ndarray, width: int, coalesced: bool = True) -> Trace:
+def random_write(base: int, indices: np.ndarray, width: int, coalesced: bool = True):
     lines = _random_lines(base, indices, width)
     t = Trace(lines, np.ones(len(lines), dtype=bool))
-    return coalesce(t) if coalesced else t
+    t = _coalesce_eager(t) if coalesced else t
+    return _EagerLeaf(t) if _LAZY else t
 
 
-def coalesce(t: Trace) -> Trace:
-    """Cache-line abstraction: merge *adjacent* requests to the same line."""
+# ---------------------------------------------------------------------------
+# combinators
+# ---------------------------------------------------------------------------
+
+
+def _coalesce_eager(t: Trace) -> Trace:
     if t.n == 0:
         return t
     keep = np.ones(t.n, dtype=bool)
@@ -107,50 +424,61 @@ def coalesce(t: Trace) -> Trace:
     return Trace(t.lines[keep], t.is_write[keep])
 
 
-def concat(*traces: Trace) -> Trace:
+def coalesce(t):
+    """Cache-line abstraction: merge *adjacent* requests to the same line."""
+    if isinstance(t, LazyTrace):
+        return _EagerLeaf(_coalesce_eager(t.materialize()))
+    return _coalesce_eager(t)
+
+
+def concat(*traces):
     traces = [t for t in traces if t.n > 0]
     if not traces:
         return Trace.empty()
+    if _LAZY:
+        if len(traces) == 1:
+            return _as_lazy(traces[0])
+        return _Concat([_as_lazy(t) for t in traces])
+    traces = [materialize(t) for t in traces]
     return Trace(
         np.concatenate([t.lines for t in traces]),
         np.concatenate([t.is_write for t in traces]),
     )
 
 
-def _interleave_by_position(traces: list[Trace], positions: list[np.ndarray]) -> Trace:
-    lines = np.concatenate([t.lines for t in traces])
-    wr = np.concatenate([t.is_write for t in traces])
-    pos = np.concatenate(positions)
-    order = np.argsort(pos, kind="stable")
-    return Trace(lines[order], wr[order])
-
-
-def round_robin(*traces: Trace) -> Trace:
-    """Merge streams 1:1 (requests beyond the shortest stream follow)."""
+def _merge(traces, kind: str):
     traces = [t for t in traces if t.n > 0]
     if not traces:
         return Trace.empty()
-    k = len(traces)
-    positions = [np.arange(t.n, dtype=np.float64) * k + i for i, t in enumerate(traces)]
-    return _interleave_by_position(traces, positions)
+    if len(traces) == 1:
+        # a single stream merges to itself — identical in both modes
+        return _as_lazy(traces[0]) if _LAZY else materialize(traces[0])
+    if _LAZY:
+        return _Merge([_as_lazy(t) for t in traces], kind)
+    traces = [materialize(t) for t in traces]
+    order = (_round_robin_order([t.n for t in traces]) if kind == "rr"
+             else _proportional_order([t.n for t in traces]))
+    lines = np.concatenate([t.lines for t in traces])
+    wr = np.concatenate([t.is_write for t in traces])
+    return Trace(lines[order], wr[order])
 
 
-def proportional_interleave(*traces: Trace) -> Trace:
+def round_robin(*traces):
+    """Merge streams 1:1 (requests beyond the shortest stream follow)."""
+    return _merge(traces, "rr")
+
+
+def proportional_interleave(*traces):
     """Merge concurrently-produced streams at rates proportional to length.
 
     Stream i's j-th request is placed at virtual time j / len_i, so all
     streams start and finish together — the steady-state behaviour of the
-    paper's pipelined producers with priority arbitration."""
-    traces = [t for t in traces if t.n > 0]
-    if not traces:
-        return Trace.empty()
-    positions = [
-        (np.arange(t.n, dtype=np.float64) + 0.5) / t.n + i * 1e-12
-        for i, t in enumerate(traces)
-    ]
-    return _interleave_by_position(traces, positions)
+    paper's pipelined producers with priority arbitration.  Ties are broken
+    by stream index (exactly, via lexsort)."""
+    return _merge(traces, "prop")
 
 
-def split_round_robin(t: Trace, k: int) -> list[Trace]:
+def split_round_robin(t, k: int) -> list[Trace]:
     """Deal a trace across k channels line-by-line (round-robin share)."""
+    t = materialize(t)
     return [Trace(t.lines[i::k], t.is_write[i::k]) for i in range(k)]

@@ -11,6 +11,9 @@
 
 All partitioners are host-side numpy preprocessing, mirroring the paper's
 simulation environment where partitioned binaries are prepared offline.
+Partition indices are cached per process (``repro.core.hostcache``) keyed on
+the graph's content fingerprint and the partitioning parameters, so sweep
+scenarios differing only in accelerator or DRAM axes reuse them.
 """
 from __future__ import annotations
 
@@ -19,11 +22,27 @@ import math
 
 import numpy as np
 
+from repro.core.hostcache import ARTIFACTS
 from repro.graph.structure import Graph
 
 
 def num_intervals(n: int, interval_size: int) -> int:
     return max(1, math.ceil(n / interval_size))
+
+
+def interval_routing(keys: np.ndarray, n_buckets: int,
+                     interval_size: int) -> tuple[np.ndarray, np.ndarray]:
+    """Stable grouping of positions by ``keys // interval_size``.
+
+    Returns ``(order, bounds)``: ``order[bounds[j]:bounds[j+1]]`` are the
+    positions whose key falls in interval j, in original order.  This is the
+    routing step the accelerators previously re-ran every iteration; it only
+    depends on static edge structure, so callers hoist it out of the
+    iteration loop (one global argsort, reused every iteration)."""
+    bucket = keys // interval_size
+    order = np.argsort(bucket, kind="stable")
+    bounds = np.searchsorted(bucket[order], np.arange(n_buckets + 1))
+    return order, bounds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,12 +83,16 @@ class HorizontalPartitions:
 
 def horizontal_partition(g: Graph, interval_size: int, by: str = "src") -> HorizontalPartitions:
     assert by in ("src", "dst")
-    k = num_intervals(g.n, interval_size)
-    key = (g.src if by == "src" else g.dst) // interval_size
-    order = np.argsort(key, kind="stable")
-    bounds = np.searchsorted(key[order], np.arange(k + 1))
-    edge_idx = [order[bounds[p] : bounds[p + 1]] for p in range(k)]
-    return HorizontalPartitions(g, interval_size, by, k, edge_idx)
+
+    def build() -> HorizontalPartitions:
+        k = num_intervals(g.n, interval_size)
+        order, bounds = interval_routing(
+            g.src if by == "src" else g.dst, k, interval_size)
+        edge_idx = [order[bounds[p] : bounds[p + 1]] for p in range(k)]
+        return HorizontalPartitions(g, interval_size, by, k, edge_idx)
+
+    return ARTIFACTS.get_or_build(
+        (g.fingerprint, "horizontal", interval_size, by), build)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,22 +117,25 @@ class VerticalPartitions:
 
 
 def vertical_partition(g: Graph, interval_size: int, n_chunks: int = 1) -> VerticalPartitions:
-    k = num_intervals(g.n, interval_size)
-    key = g.dst // interval_size
-    order = np.argsort(key, kind="stable")
-    bounds = np.searchsorted(key[order], np.arange(k + 1))
-    edge_idx: list[list[np.ndarray]] = []
-    chunk_size = math.ceil(g.n / n_chunks)
-    for p in range(k):
-        part = order[bounds[p] : bounds[p + 1]]
-        # ThunderGP sorts each partition's edges by source vertex so source
-        # value loads are semi-sequential.
-        part = part[np.argsort(g.src[part], kind="stable")]
-        ckey = g.src[part] // chunk_size
-        corder = np.argsort(ckey, kind="stable")
-        cbounds = np.searchsorted(ckey[corder], np.arange(n_chunks + 1))
-        edge_idx.append([part[corder[cbounds[c] : cbounds[c + 1]]] for c in range(n_chunks)])
-    return VerticalPartitions(g, interval_size, k, n_chunks, edge_idx)
+    def build() -> VerticalPartitions:
+        k = num_intervals(g.n, interval_size)
+        order, bounds = interval_routing(g.dst, k, interval_size)
+        edge_idx: list[list[np.ndarray]] = []
+        chunk_size = math.ceil(g.n / n_chunks)
+        for p in range(k):
+            part = order[bounds[p] : bounds[p + 1]]
+            # ThunderGP sorts each partition's edges by source vertex so
+            # source value loads are semi-sequential.
+            part = part[np.argsort(g.src[part], kind="stable")]
+            ckey = g.src[part] // chunk_size
+            corder = np.argsort(ckey, kind="stable")
+            cbounds = np.searchsorted(ckey[corder], np.arange(n_chunks + 1))
+            edge_idx.append(
+                [part[corder[cbounds[c] : cbounds[c + 1]]] for c in range(n_chunks)])
+        return VerticalPartitions(g, interval_size, k, n_chunks, edge_idx)
+
+    return ARTIFACTS.get_or_build(
+        (g.fingerprint, "vertical", interval_size, n_chunks), build)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,16 +169,22 @@ class IntervalShards:
 
 def interval_shard_partition(g: Graph, interval_size: int) -> IntervalShards:
     assert interval_size <= 65536, "ForeGraph compressed edges need 16-bit local ids"
-    q = num_intervals(g.n, interval_size)
-    ikey = g.src // interval_size
-    jkey = g.dst // interval_size
-    key = ikey * q + jkey
-    order = np.argsort(key, kind="stable")
-    bounds = np.searchsorted(key[order], np.arange(q * q + 1))
-    shard_edge_idx = [
-        [order[bounds[i * q + j] : bounds[i * q + j + 1]] for j in range(q)] for i in range(q)
-    ]
-    return IntervalShards(g, interval_size, q, shard_edge_idx)
+
+    def build() -> IntervalShards:
+        q = num_intervals(g.n, interval_size)
+        ikey = g.src // interval_size
+        jkey = g.dst // interval_size
+        key = ikey * q + jkey
+        order = np.argsort(key, kind="stable")
+        bounds = np.searchsorted(key[order], np.arange(q * q + 1))
+        shard_edge_idx = [
+            [order[bounds[i * q + j] : bounds[i * q + j + 1]] for j in range(q)]
+            for i in range(q)
+        ]
+        return IntervalShards(g, interval_size, q, shard_edge_idx)
+
+    return ARTIFACTS.get_or_build(
+        (g.fingerprint, "interval_shard", interval_size), build)
 
 
 def stride_mapping(n: int, q: int) -> np.ndarray:

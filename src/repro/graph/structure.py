@@ -8,6 +8,7 @@ kernels receive plain arrays (CSR/CSC/edge-list views).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import cached_property
 
 import numpy as np
@@ -71,6 +72,20 @@ class Graph:
         if sigma == 0:
             return 0.0
         return float(np.mean(((d - mu) / sigma) ** 3))
+
+    @cached_property
+    def fingerprint(self) -> str:
+        """Content hash of the graph (n + edge list + weights): the identity
+        under which host-side preprocessing artifacts (partition indices,
+        prepared graphs, semantic executions) are cached and shared across
+        sweep scenarios."""
+        h = hashlib.sha256()
+        h.update(np.int64(self.n).tobytes())
+        h.update(self.src.tobytes())
+        h.update(self.dst.tobytes())
+        if self.weights is not None:
+            h.update(self.weights.tobytes())
+        return h.hexdigest()
 
     # ---- derived index structures (cached, host-side) ----
 

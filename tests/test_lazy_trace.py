@@ -1,0 +1,255 @@
+"""Lazy trace IR: byte-identity with the eager combinators, O(1)
+accounting, fused batch packing, the lexsort tie-break of
+proportional_interleave, and the host artifact caches."""
+import numpy as np
+import pytest
+
+from repro.configs.graphsim import default_config
+from repro.core import hostcache
+from repro.core.accelerators import ACCELERATORS
+from repro.core.dram import dram_config
+from repro.core.engine import TraceBatch, simulate_batch, simulate_sequential
+from repro.core.trace import (
+    LazyTrace,
+    Trace,
+    concat,
+    eager_traces,
+    lazy_enabled,
+    materialize,
+    proportional_interleave,
+    random_write,
+    round_robin,
+    seq_read,
+    seq_write,
+)
+from repro.graph.partition import horizontal_partition, interval_routing
+from repro.graph.problems import PROBLEMS
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    hostcache.clear_all()
+    yield
+    hostcache.clear_all()
+
+
+def assert_traces_equal(a, b, ctx=""):
+    ma, mb = materialize(a), materialize(b)
+    np.testing.assert_array_equal(ma.lines, mb.lines, err_msg=str(ctx))
+    np.testing.assert_array_equal(ma.is_write, mb.is_write, err_msg=str(ctx))
+
+
+# ---- IR node behaviour -----------------------------------------------------
+
+
+def test_lazy_mode_is_default():
+    assert lazy_enabled()
+    assert isinstance(seq_read(0, 256), LazyTrace)
+    with eager_traces():
+        assert not lazy_enabled()
+        assert isinstance(seq_read(0, 256), Trace)
+    assert lazy_enabled()
+
+
+def test_range_leaf_accounting_without_materialisation():
+    t = seq_read(0, 4096)
+    assert t._mat is None
+    assert t.n == 64 and t.read_bytes == 4096 and t.write_bytes == 0
+    w = seq_write(64, 128)
+    assert w.n == 2 and w.write_bytes == 128 and w.read_bytes == 0
+    assert t._mat is None  # accounting never materialised anything
+
+
+def test_expression_accounting_is_o1():
+    a, b, c = seq_read(0, 640), seq_write(8192, 320), seq_read(16384, 6400)
+    e = concat(a, proportional_interleave(b, c))
+    assert e.n == a.n + b.n + c.n
+    assert e.write_bytes == b.write_bytes
+    assert e.read_bytes == a.read_bytes + c.read_bytes
+    assert e._mat is None
+
+
+@pytest.mark.parametrize("builder", [
+    lambda s: s["concat"],
+    lambda s: s["rr"],
+    lambda s: s["prop"],
+    lambda s: s["nested"],
+])
+def test_lazy_matches_eager_composition(builder):
+    def build():
+        a = seq_read(0, 1000)
+        b = seq_write(8192, 4000)
+        c = seq_read(65536, 2500)
+        d = random_write(131072, np.array([5, 1, 9, 1, 7]), 4)
+        return dict(
+            concat=concat(a, b, c, d),
+            rr=round_robin(a, b, c),
+            prop=proportional_interleave(a, b, c, d),
+            nested=concat(a, proportional_interleave(concat(b, d), c),
+                          round_robin(c, d)),
+        )
+
+    lazy = builder(build())
+    with eager_traces():
+        eager = builder(build())
+    assert isinstance(lazy, LazyTrace) and isinstance(eager, Trace)
+    assert lazy.n == eager.n
+    assert_traces_equal(lazy, eager)
+
+
+def test_single_and_empty_stream_edge_cases():
+    a = seq_read(0, 640)
+    for comb in (concat, round_robin, proportional_interleave):
+        only = comb(Trace.empty(), a, Trace.empty())
+        assert_traces_equal(only, a, comb.__name__)
+        assert comb(Trace.empty(), Trace.empty()).n == 0
+
+
+def test_lazy_accepts_eager_trace_inputs():
+    raw = Trace(np.array([3, 1, 2]), np.array([True, False, True]))
+    m = concat(seq_read(0, 64), raw)
+    assert m.n == 4
+    assert m.lines.tolist() == [0, 3, 1, 2]
+    assert m.is_write.tolist() == [False, True, False, True]
+
+
+# ---- fused batch packing ---------------------------------------------------
+
+
+def test_trace_batch_fused_emit_matches_decode():
+    cfg = dram_config("default")
+    lazy = [
+        concat(seq_read(0, 5000), seq_write(1 << 20, 3000)),
+        proportional_interleave(seq_read(0, 10000), seq_write(1 << 21, 700)),
+        seq_read(123, 64),
+    ]
+    eager = [materialize(t) for t in lazy]
+    lb = TraceBatch.from_traces(lazy, cfg)
+    eb = TraceBatch.from_traces(eager, cfg)
+    np.testing.assert_array_equal(lb.bank, eb.bank)
+    np.testing.assert_array_equal(lb.row, eb.row)
+
+
+def test_lazy_traces_time_identically_to_eager():
+    cfg = dram_config("hbm")
+    rng = np.random.default_rng(5)
+    lazy = [
+        proportional_interleave(
+            seq_read(0, 40000),
+            random_write(1 << 22, rng.integers(0, 4096, size=500), 4),
+        ),
+        concat(seq_read(1 << 18, 9000), seq_write(1 << 19, 9000)),
+    ]
+    eager = [materialize(t) for t in lazy]
+    for rl, re in zip(simulate_batch(lazy, cfg), simulate_sequential(eager, cfg)):
+        assert rl == re
+
+
+# ---- proportional_interleave lexsort tie-break (satellite regression) ------
+
+
+def test_proportional_interleave_exact_tiebreak_long_streams():
+    """Streams whose length product exceeds ~1e12 have virtual-time gaps
+    below the old ``i * 1e-12`` epsilon: the float tie-break reordered them
+    across streams.  The lexsort merge must match an exact integer-key
+    oracle; the epsilon merge provably cannot."""
+    n1, n2 = 1_048_575, 1_048_577  # odd, coprime: one exact tie, tiny gaps
+    a = proportional_interleave(
+        Trace(np.arange(n1) * 2, np.zeros(n1, dtype=bool)),
+        Trace(np.arange(n2) * 2 + 1, np.zeros(n2, dtype=bool)),
+    )
+    merged = materialize(a).lines
+
+    # exact oracle: stream i's j-th request at (2j+1)/(2*n_i); compare via
+    # integer cross-multiplication (fits in int64), ties broken by stream
+    key = np.concatenate([
+        (2 * np.arange(n1, dtype=np.int64) + 1) * n2,
+        (2 * np.arange(n2, dtype=np.int64) + 1) * n1,
+    ])
+    sub = np.concatenate([np.zeros(n1, np.int8), np.ones(n2, np.int8)])
+    cat = np.concatenate([np.arange(n1) * 2, np.arange(n2) * 2 + 1])
+    exact = cat[np.lexsort((sub, key))]
+    np.testing.assert_array_equal(merged, exact)
+
+    # the old epsilon ordering diverges on these lengths
+    pos = np.concatenate([
+        (np.arange(n1) + 0.5) / n1,
+        (np.arange(n2) + 0.5) / n2 + 1e-12,
+    ])
+    old = cat[np.argsort(pos, kind="stable")]
+    assert not np.array_equal(old, exact)
+
+
+def test_proportional_interleave_equal_length_ties_stream_order():
+    a = Trace(np.array([10, 11]), np.zeros(2, dtype=bool))
+    b = Trace(np.array([20, 21]), np.zeros(2, dtype=bool))
+    m = proportional_interleave(a, b)
+    # identical virtual times: stream 0 wins every tie
+    assert m.lines.tolist() == [10, 20, 11, 21]
+
+
+# ---- host artifact caches --------------------------------------------------
+
+
+def test_partition_cache_shares_across_equal_graphs(small_rmat):
+    p1 = horizontal_partition(small_rmat, 256, by="src")
+    hits0 = hostcache.ARTIFACTS.hits
+    p2 = horizontal_partition(small_rmat, 256, by="src")
+    assert p2 is p1
+    assert hostcache.ARTIFACTS.hits == hits0 + 1
+    # different params miss
+    p3 = horizontal_partition(small_rmat, 512, by="src")
+    assert p3 is not p1
+
+
+def test_interval_routing_groups_stably():
+    keys = np.array([5, 0, 9, 5, 3, 9, 0])
+    order, bounds = interval_routing(keys, 3, 4)
+    groups = [order[bounds[j]:bounds[j + 1]].tolist() for j in range(3)]
+    assert groups == [[1, 4, 6], [0, 3], [2, 5]]  # stable within buckets
+
+
+def test_semantic_cache_reuses_execution_across_dram_axes(small_rmat):
+    accel = ACCELERATORS["hitgraph"](default_config("hitgraph"))
+    root = int(np.argmax(small_rmat.degrees_out))
+    p1 = accel.prepare(small_rmat, PROBLEMS["bfs"], root=root, dram="ddr3")
+    misses = hostcache.SEMANTICS.misses
+    p2 = accel.prepare(small_rmat, PROBLEMS["bfs"], root=root, dram="hbm")
+    assert hostcache.SEMANTICS.misses == misses  # second prepare: pure hit
+    assert p2.pt is p1.pt
+    assert p2.dram.name != p1.dram.name
+    r1, r2 = p1.finalize(), p2.finalize()
+    assert r1.iterations == r2.iterations
+    assert r1.timing != r2.timing  # different memory technology still times
+
+
+def test_semantic_cache_keys_on_config(small_rmat):
+    from repro.core.accelerators.base import AccelConfig
+
+    root = int(np.argmax(small_rmat.degrees_out))
+    a = ACCELERATORS["accugraph"](AccelConfig(interval_size=256))
+    b = ACCELERATORS["accugraph"](AccelConfig(interval_size=256,
+                                              optimizations=frozenset()))
+    a.prepare(small_rmat, PROBLEMS["bfs"], root=root)
+    misses = hostcache.SEMANTICS.misses
+    b.prepare(small_rmat, PROBLEMS["bfs"], root=root)
+    assert hostcache.SEMANTICS.misses == misses + 1  # different semantics
+
+
+def test_disabled_context_bypasses_caches(small_rmat):
+    with hostcache.disabled():
+        p1 = horizontal_partition(small_rmat, 256, by="src")
+        p2 = horizontal_partition(small_rmat, 256, by="src")
+        assert p1 is not p2
+        assert len(hostcache.ARTIFACTS) == 0
+
+
+def test_host_cache_lru_bound():
+    c = hostcache.HostCache(capacity=2)
+    assert c.get_or_build("a", lambda: 1) == 1
+    assert c.get_or_build("b", lambda: 2) == 2
+    assert c.get_or_build("a", lambda: 0) == 1  # hit, refreshes a
+    assert c.get_or_build("c", lambda: 3) == 3  # evicts b
+    assert c.get_or_build("b", lambda: 9) == 9  # rebuilt
+    assert len(c) == 2
+    assert c.stats()["hits"] == 1
