@@ -41,3 +41,22 @@ CONFIG_FACTORIES = {
 
 def default_config(accel: str, **kw) -> AccelConfig:
     return CONFIG_FACTORIES[accel](**kw)
+
+
+# Memory-controller scenario axes (SweepSpec fields of the same names).
+# The defaults — row-interleaved mapping, open page, no pseudo-channels —
+# reproduce the paper's implicit controller; the full cross product is the
+# memory-sensitivity study (benchmarks/bench_memory.py).
+MEMORY_AXES: dict[str, tuple] = dict(
+    mappings=("row", "bank", "bank_xor"),
+    page_policies=("open", "closed"),
+    pseudo_channels=(False, True),
+)
+
+# The subset bench_memory sweeps by default (BENCH_memory.json): extremes
+# of each axis on the HBM preset, per the ISSUE-4 scenario matrix.
+MEMORY_SENSITIVITY_AXES: dict[str, tuple] = dict(
+    mappings=("row", "bank_xor"),
+    page_policies=("open", "closed"),
+    pseudo_channels=(False, True),
+)

@@ -9,7 +9,14 @@ through a DRAM timing model (a vectorised, TPU-native re-design of
 Ramulator's bank state machines — see DESIGN.md for the hardware-adaptation
 notes).
 """
-from repro.core.dram import DRAMConfig, DRAM_CONFIGS, dram_config
+from repro.core.dram import (
+    AddressMapping,
+    DRAMConfig,
+    DRAM_CONFIGS,
+    MAPPING_SCHEMES,
+    PAGE_POLICIES,
+    dram_config,
+)
 from repro.core.trace import (
     Trace,
     seq_read,
@@ -20,6 +27,7 @@ from repro.core.trace import (
     concat,
     round_robin,
     proportional_interleave,
+    split_round_robin,
 )
 from repro.core.engine import (
     TimingReport,
@@ -36,10 +44,14 @@ from repro.core.metrics import SimReport
 from repro.core.memory_layout import MemoryLayout
 
 __all__ = [
+    "AddressMapping",
     "DRAMConfig",
     "DRAM_CONFIGS",
+    "MAPPING_SCHEMES",
+    "PAGE_POLICIES",
     "dram_config",
     "Trace",
+    "split_round_robin",
     "seq_read",
     "seq_write",
     "random_read",

@@ -28,7 +28,7 @@ from repro.core.engine import (
 )
 from repro.core.hostcache import ARTIFACTS, SEMANTICS
 from repro.core.metrics import IterationStats, SimReport
-from repro.core.trace import Trace
+from repro.core.trace import Trace, split_round_robin
 from repro.graph.problems import Problem
 from repro.graph.structure import Graph
 
@@ -127,6 +127,28 @@ def _assemble_phased(
     return total
 
 
+def expand_pseudo_channels(
+    pt: PhasedTrace, cfg: DRAMConfig
+) -> tuple[PhasedTrace, DRAMConfig]:
+    """Resolve HBM pseudo-channel mode at the trace level: each channel
+    trace is dealt across two pseudo-channels (lazy strided split at the
+    mapping's channel-interleave granularity) and the config becomes the
+    per-pseudo-channel view (half bus width, half banks).  Identity when
+    the mode is off.  After expansion, "channels" everywhere downstream
+    (phase max, channels_used, bw denominator) means pseudo-channels."""
+    if not cfg.pseudo_channels:
+        return pt, cfg
+    g = cfg.mapping.channel_lines
+    out = PhasedTrace()
+    for channel_traces in pt.phases:
+        # append directly: a non-empty phase stays non-empty after the
+        # deal, and phase alignment must be preserved exactly
+        out.phases.append(
+            [pc for tr in channel_traces for pc in split_round_robin(tr, 2, g)]
+        )
+    return out, cfg.pseudo_channel_view()
+
+
 def simulate_phased(
     pt: PhasedTrace, cfg: DRAMConfig, accel_cfg: AccelConfig,
     batched: bool = True,
@@ -137,6 +159,7 @@ def simulate_phased(
     grouped dispatch; ``batched=False`` keeps the historical one-dispatch-
     per-trace path.  Both produce identical reports.
     """
+    pt, cfg = expand_pseudo_channels(pt, cfg)
     traces, phase_of = pt.flatten()
     if batched:
         reports = simulate_batch(traces, cfg, engine=accel_cfg.engine,
@@ -251,6 +274,10 @@ class Accelerator(abc.ABC):
         # execution (the PhasedTrace is shared — trace nodes are immutable)
         values = values.copy()
         stats = [dataclasses.replace(s) for s in stats]
+        # pseudo-channel mode resolves here, so PendingRun.traces() and
+        # PendingRun.dram are consistent for external batchers (the sweep
+        # runner times traces() against dram directly)
+        pt, dram = expand_pseudo_channels(pt, dram)
         return PendingRun(
             accelerator=self.name,
             graph=g.name,

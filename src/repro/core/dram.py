@@ -15,10 +15,142 @@ paper studies:
 
 All timing is carried in integer memory-clock cycles (tCK = 2000/data_rate
 ns) so the engine can run in int32 on device.
+
+The *memory controller* is configurable per device (the axes the
+predecessor study arXiv 2010.13619 and ReGraph arXiv 2203.02676 show shift
+accelerator rankings):
+
+- :class:`AddressMapping` — how a line address is decoded into
+  (bank, row, column): ``row`` keeps consecutive lines in one row buffer
+  (row:bank:col, the classic open-page-friendly layout and the historical
+  default), ``bank`` interleaves consecutive lines across banks
+  (bank-level-parallelism-friendly), ``bank_xor`` keeps the row layout but
+  permutes the bank index by XOR with the row bits (Zhang et al.'s
+  permutation-based page interleaving, which breaks conflict resonance
+  between strided streams).  ``channel_lines`` sets the granularity (in
+  64B lines) at which one stream is dealt across HBM pseudo-channels.
+- ``page_policy`` — ``open`` leaves the row buffer open after an access
+  (hits possible, conflicts cost a precharge), ``closed`` auto-precharges
+  after every access (every request activates; no conflicts).
+- ``pseudo_channels`` — HBM pseudo-channel mode: each legacy channel
+  splits into two pseudo-channels with half the bus width and half the
+  banks each (:meth:`DRAMConfig.pseudo_channel_view`).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+
+import numpy as np
+
+MAPPING_SCHEMES = ("row", "bank", "bank_xor")
+PAGE_POLICIES = ("open", "closed")
+
+
+@dataclasses.dataclass(frozen=True)
+class AddressMapping:
+    """Line-address decode scheme of the memory controller.
+
+    scheme: ``row`` (row:bank:col — consecutive lines fill a row buffer,
+      then move to the next bank; the historical default), ``bank``
+      (bank:col — consecutive lines round-robin across banks), or
+      ``bank_xor`` (row layout with bank = bank XOR row low bits —
+      Zhang et al.'s permutation-based page interleaving).
+    channel_lines: channel-interleave granularity in 64B lines — the unit
+      in which a stream is dealt across HBM pseudo-channels (1 =
+      line-interleaved; e.g. 32 = 2KB coarse blocks).  Only meaningful
+      with pseudo-channels (or explicit ``split_round_robin`` calls).
+    """
+
+    scheme: str = "row"
+    channel_lines: int = 1
+
+    def __post_init__(self):
+        if self.scheme not in MAPPING_SCHEMES:
+            raise ValueError(
+                f"unknown address-mapping scheme {self.scheme!r} "
+                f"(use one of {', '.join(MAPPING_SCHEMES)})")
+        if self.channel_lines < 1:
+            raise ValueError(
+                f"channel_lines must be >= 1, got {self.channel_lines}")
+
+    @property
+    def label(self) -> str:
+        """Short axis token for scenario ids / result rows."""
+        if self.channel_lines == 1:
+            return self.scheme
+        return f"{self.scheme}@{self.channel_lines}"
+
+
+def decode_lines(
+    lines: np.ndarray,
+    cfg: "DRAMConfig",
+    bank_out: np.ndarray | None = None,
+    row_out: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised line -> (bank, row) decode under ``cfg.mapping``.
+
+    ``bank_out`` / ``row_out`` (int32) let the caller decode straight into
+    pre-allocated buffers (the lazy trace IR's fused emit path); both must
+    be given together, ``lines`` is treated as scratch (clobbered in
+    place).  Returns the (bank, row) arrays either way.
+    """
+    lpr = cfg.lines_per_row
+    nb = cfg.nbanks
+    scheme = cfg.mapping.scheme
+    if scheme == "bank_xor" and nb & (nb - 1):
+        raise ValueError(
+            f"bank_xor mapping requires a power-of-two bank count, "
+            f"got {nb} ({cfg.name})")
+    if bank_out is None:
+        if scheme == "row":
+            return (((lines // lpr) % nb).astype(np.int32),
+                    (lines // (lpr * nb)).astype(np.int32))
+        if scheme == "bank":
+            return ((lines % nb).astype(np.int32),
+                    (lines // (nb * lpr)).astype(np.int32))
+        row = lines // (lpr * nb)
+        return ((((lines // lpr) ^ row) % nb).astype(np.int32),
+                row.astype(np.int32))
+    # fused path: minimal temporaries, lines reused as scratch
+    if scheme == "row":
+        q = lines // lpr
+        np.remainder(q, nb, out=q)
+        bank_out[:] = q
+        np.floor_divide(lines, lpr * nb, out=lines)
+        row_out[:] = lines
+    elif scheme == "bank":
+        q = lines % nb
+        bank_out[:] = q
+        np.floor_divide(lines, nb * lpr, out=lines)
+        row_out[:] = lines
+    else:  # bank_xor
+        q = lines // lpr
+        np.floor_divide(lines, lpr * nb, out=lines)  # lines := row
+        row_out[:] = lines
+        np.bitwise_xor(q, lines, out=q)
+        np.remainder(q, nb, out=q)
+        bank_out[:] = q
+    return bank_out, row_out
+
+
+def decode_line_scalar(line: int, cfg: "DRAMConfig") -> tuple[int, int, int]:
+    """Scalar reference decode: line -> (bank, row, col) in plain Python
+    ints.  The property tests check the vectorised :func:`decode_lines`
+    against this, and that every mapping is a bijection on the line space."""
+    lpr = cfg.lines_per_row
+    nb = cfg.nbanks
+    scheme = cfg.mapping.scheme
+    if scheme == "row":
+        return (line // lpr) % nb, line // (lpr * nb), line % lpr
+    if scheme == "bank":
+        return line % nb, line // (nb * lpr), (line // nb) % lpr
+    if nb & (nb - 1):  # same precondition as the vectorised decode:
+        raise ValueError(  # XOR-then-mod only permutes for pow2 moduli
+            f"bank_xor mapping requires a power-of-two bank count, "
+            f"got {nb} ({cfg.name})")
+    row = line // (lpr * nb)
+    return ((line // lpr) ^ row) % nb, row, line % lpr
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,13 +170,34 @@ class DRAMConfig:
     tRCD_ns: float = 11.0
     tRP_ns: float = 11.0
     tRC_ns: float = 28.0  # min latency between row switches (activates)
+    # memory-controller configuration (the sweepable axes)
+    mapping: AddressMapping = AddressMapping()
+    page_policy: str = "open"  # open | closed
+    pseudo_channels: bool = False  # HBM pseudo-channel mode
+
+    def __post_init__(self):
+        if self.page_policy not in PAGE_POLICIES:
+            raise ValueError(
+                f"unknown page policy {self.page_policy!r} "
+                f"(use one of {', '.join(PAGE_POLICIES)})")
+        if self.pseudo_channels:
+            if self.standard != "HBM":
+                raise ValueError(
+                    f"pseudo-channel mode is an HBM feature "
+                    f"({self.name} is {self.standard})")
+            if self.banks_per_rank % 2:
+                raise ValueError(
+                    "pseudo-channel mode needs an even bank count to split")
 
     @property
     def tCK_ns(self) -> float:
         return 2000.0 / self.data_rate
 
     def ns_to_cycles(self, ns: float) -> int:
-        return max(1, round(ns / self.tCK_ns))
+        # Explicit round-half-up: Python's round() uses banker's rounding
+        # (round(2.5) == 2), which would let cycle counts silently change
+        # between configs that land on exact .5 cycle boundaries.
+        return max(1, math.floor(ns / self.tCK_ns + 0.5))
 
     @property
     def tCL(self) -> int:
@@ -66,7 +219,7 @@ class DRAMConfig:
     def tBL(self) -> int:
         """Cycles the data bus is occupied by one 64B line transfer."""
         ns = self.line_bytes / self.bw_per_channel  # GB/s == B/ns
-        return max(1, round(ns / self.tCK_ns))
+        return self.ns_to_cycles(ns)
 
     @property
     def nbanks(self) -> int:
@@ -74,11 +227,31 @@ class DRAMConfig:
         return self.ranks * self.banks_per_rank
 
     @property
+    def page_open(self) -> bool:
+        return self.page_policy == "open"
+
+    @property
     def lines_per_row(self) -> int:
         return self.row_buffer_bytes // self.line_bytes
 
     def timing_cycles(self) -> dict[str, int]:
         return dict(tCL=self.tCL, tRCD=self.tRCD, tRP=self.tRP, tRC=self.tRC, tBL=self.tBL)
+
+    def pseudo_channel_view(self) -> "DRAMConfig":
+        """The per-pseudo-channel device this config describes when
+        ``pseudo_channels`` is on: 2x channels, each with half the bus
+        width (tBL doubles) and half the banks; timing parameters and the
+        per-bank row buffer are unchanged.  Identity when the mode is off.
+        """
+        if not self.pseudo_channels:
+            return self
+        return dataclasses.replace(
+            self,
+            pseudo_channels=False,
+            channels=self.channels * 2,
+            banks_per_rank=self.banks_per_rank // 2,
+            bw_per_channel=self.bw_per_channel / 2,
+        )
 
 
 def _ddr4(name: str, channels: int, size_mbit: int) -> DRAMConfig:
@@ -109,8 +282,26 @@ DRAM_CONFIGS: dict[str, DRAMConfig] = {
 }
 
 
-def dram_config(name: str, channels: int | None = None) -> DRAMConfig:
+def dram_config(
+    name: str,
+    channels: int | None = None,
+    *,
+    mapping: AddressMapping | str | None = None,
+    page_policy: str | None = None,
+    pseudo_channels: bool | None = None,
+) -> DRAMConfig:
+    """Resolve a preset, optionally overriding the channel count and the
+    memory-controller axes (``mapping`` accepts a scheme name or a full
+    :class:`AddressMapping`)."""
     cfg = DRAM_CONFIGS[name]
+    kw: dict = {}
     if channels is not None:
-        cfg = dataclasses.replace(cfg, channels=channels)
-    return cfg
+        kw["channels"] = channels
+    if mapping is not None:
+        kw["mapping"] = (AddressMapping(mapping) if isinstance(mapping, str)
+                         else mapping)
+    if page_policy is not None:
+        kw["page_policy"] = page_policy
+    if pseudo_channels is not None:
+        kw["pseudo_channels"] = pseudo_channels
+    return dataclasses.replace(cfg, **kw) if kw else cfg

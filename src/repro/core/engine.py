@@ -28,11 +28,20 @@ in ``repro/kernels/dram_timing`` (blocked request streaming HBM->VMEM with
 bank state held in VMEM scratch across sequential grid steps; one grid row
 per batched trace).
 
-Bank mapping (row-interleaved): line -> (col, bank, row) with
-``col = line % lines_per_row``, ``bank = (line / lines_per_row) % nbanks``,
-``row = line / (lines_per_row * nbanks)`` — sequential streams fill a row
-buffer, then activate the next bank (as on real devices with open-page
-policy and row:bank:col address mapping).
+Memory-controller configuration lives on :class:`repro.core.dram.DRAMConfig`
+and threads through both engines:
+
+- address mapping (``cfg.mapping``): :func:`decode` delegates to the
+  vectorised ``repro.core.dram.decode_lines`` (row-interleaved default,
+  bank-interleaved, XOR bank permutation);
+- page policy (``cfg.page_policy``): under ``closed`` every access
+  auto-precharges — all requests are misses (activate on the critical
+  path), conflicts cannot occur, and the scan/fast/Pallas engines all
+  take the closed-page path via the static ``page_open`` flag;
+- HBM pseudo-channels (``cfg.pseudo_channels``): :func:`simulate_dram`
+  deals every channel trace across two pseudo-channels (at the mapping's
+  channel-interleave granularity) and times each against
+  ``cfg.pseudo_channel_view()`` — half bus width, half banks.
 """
 from __future__ import annotations
 
@@ -44,8 +53,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dram import DRAMConfig
-from repro.core.trace import Trace
+from repro.core.dram import DRAMConfig, decode_lines
+from repro.core.trace import Trace, split_round_robin
 
 # Version tag of the simulation semantics (accelerator models + DRAM timing
 # engines).  Bump whenever a change alters simulation *results*; the sweep
@@ -133,15 +142,12 @@ class TimingReport:
 
 
 def decode(lines: np.ndarray, cfg: DRAMConfig) -> tuple[np.ndarray, np.ndarray]:
-    """line index -> (bank, row) under the row-interleaved mapping."""
-    lpr = cfg.lines_per_row
-    nb = cfg.nbanks
-    bank = (lines // lpr) % nb
-    row = lines // (lpr * nb)
-    return bank.astype(np.int32), row.astype(np.int32)
+    """line index -> (bank, row) under the config's address mapping."""
+    return decode_lines(lines, cfg)
 
 
-def _scan_engine_impl(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
+def _scan_engine_impl(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead,
+                      page_open):
     """Exact sequential engine.  All times in int32 memory-clock cycles.
 
     Pipelined model: column reads from an open row stream back-to-back at
@@ -161,6 +167,11 @@ def _scan_engine_impl(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
     The constant final column latency tCL is added once at the end.
     Padding requests (bank == -1) are no-ops, so a trace padded to any
     length yields the same result.
+
+    ``page_open=False`` models the closed-page policy: every access
+    auto-precharges, so each valid request is a miss — an activate on the
+    critical path, tRC-limited per bank — and conflicts cannot occur (the
+    precharge happens off the critical path, after the previous access).
     """
 
     def step(carry, req):
@@ -169,9 +180,14 @@ def _scan_engine_impl(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
         valid = b >= 0  # padding requests (b == -1) are no-ops
         b = jnp.maximum(b, 0)
         cur = open_row[b]
-        is_hit = (cur == r) & valid
-        is_miss = (cur == jnp.int32(-1)) & valid
-        is_conf = valid & ~is_hit & ~is_miss
+        if page_open:
+            is_hit = (cur == r) & valid
+            is_miss = (cur == jnp.int32(-1)) & valid
+            is_conf = valid & ~is_hit & ~is_miss
+        else:
+            is_hit = jnp.bool_(False) & valid
+            is_miss = valid
+            is_conf = jnp.bool_(False) & valid
 
         horizon = jnp.maximum(bus_free - lookahead, 0)
         t_pre = jnp.maximum(last_data[b], horizon)
@@ -211,28 +227,36 @@ def _scan_engine_impl(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
     return bus_free + tCL, hits, misses, conflicts
 
 
-_ENGINE_STATICS = ("nbanks", "tCL", "tRCD", "tRP", "tRC", "tBL", "lookahead")
+_ENGINE_STATICS = ("nbanks", "tCL", "tRCD", "tRP", "tRC", "tBL", "lookahead",
+                   "page_open")
 
 _scan_engine = partial(jax.jit, static_argnames=_ENGINE_STATICS)(_scan_engine_impl)
 
 
 @partial(jax.jit, static_argnames=_ENGINE_STATICS)
-def _scan_engine_batch(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
+def _scan_engine_batch(bank, row, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead,
+                       page_open):
     """Batched exact engine: vmap of the scan over the leading [B] axis.
     Returns per-trace (cycles[B], hits[B], misses[B], conflicts[B])."""
     f = partial(_scan_engine_impl, nbanks=nbanks, tCL=tCL, tRCD=tRCD,
-                tRP=tRP, tRC=tRC, tBL=tBL, lookahead=lookahead)
+                tRP=tRP, tRC=tRC, tBL=tBL, lookahead=lookahead,
+                page_open=page_open)
     return jax.vmap(f)(bank, row)
 
 
-def classify_fast(bank: np.ndarray, row: np.ndarray, nbanks: int) -> np.ndarray:
+def classify_fast(bank: np.ndarray, row: np.ndarray, nbanks: int,
+                  page_open: bool = True) -> np.ndarray:
     """Exact hit(0)/miss(1)/conflict(2) classification, vectorised.
 
     A request's class depends only on the previous request to the same bank
-    (open-page policy), independent of timing."""
+    (open-page policy), independent of timing.  Under the closed-page
+    policy every request auto-precharges its row, so all requests are
+    misses."""
     n = len(bank)
     if n == 0:
         return np.zeros(0, dtype=np.int8)
+    if not page_open:
+        return np.ones(n, dtype=np.int8)
     order = np.argsort(bank, kind="stable")
     sb, sr = bank[order], row[order]
     same_bank = sb[1:] == sb[:-1]
@@ -317,8 +341,7 @@ class TraceBatch:
                 # buffers (one pass, no per-combinator intermediates)
                 if scratch is None:
                     scratch = np.empty(L, dtype=np.int64)
-                emit(bank[i, : t.n], row[i, : t.n], cfg.lines_per_row,
-                     cfg.nbanks, scratch)
+                emit(bank[i, : t.n], row[i, : t.n], cfg, scratch)
             else:
                 bank[i, : t.n], row[i, : t.n] = decode(t.lines, cfg)
         return TraceBatch(bank, row, lengths, list(traces))
@@ -354,11 +377,21 @@ def simulate_channel_scan(trace: Trace, cfg: DRAMConfig) -> TimingReport:
     cycles, hits, misses, conflicts = _scan_engine(
         jnp.asarray(bank), jnp.asarray(row), cfg.nbanks,
         t["tCL"], t["tRCD"], t["tRP"], t["tRC"], t["tBL"],
-        lookahead=16 * t["tBL"],
+        lookahead=16 * t["tBL"], page_open=cfg.page_open,
     )
     _record_dispatch(1, trace.n)
     return _channel_report(trace, cfg, int(cycles), int(hits), int(misses),
                            int(conflicts))
+
+
+def _closed_page_chain_bound(n: int, same_bank_adjacent: int,
+                             t: dict[str, int]) -> int:
+    """Closed-page program-order bound: every request activates, and
+    back-to-back activates in one bank serialise at tRC — for row-mapped
+    sequential streams that is (almost) *every* adjacent pair, which the
+    per-bank total wildly underestimates (requests to one bank are
+    consecutive, so their tRC chain cannot overlap other banks)."""
+    return n * t["tBL"] + same_bank_adjacent * max(t["tRC"] - t["tBL"], 0)
 
 
 def _fast_cycles(n: int, cls: np.ndarray, bank: np.ndarray, cfg: DRAMConfig,
@@ -376,6 +409,9 @@ def _fast_cycles(n: int, cls: np.ndarray, bank: np.ndarray, cfg: DRAMConfig,
     act_cost = np.where(cls == 0, t["tBL"], np.where(cls == 1, miss_cost, conf_cost))
     per_bank = np.bincount(bank, weights=act_cost, minlength=cfg.nbanks)
     bank_bound = int(per_bank.max())
+    if not cfg.page_open:
+        adj = int((bank[1:] == bank[:-1]).sum()) if n > 1 else 0
+        bank_bound = max(bank_bound, _closed_page_chain_bound(n, adj, t))
     cycles = int(max(bus_bound, bank_bound)) + t["tCL"]
     return cycles, hits, misses, conflicts
 
@@ -388,19 +424,21 @@ def simulate_channel_fast(trace: Trace, cfg: DRAMConfig) -> TimingReport:
     if trace.n == 0:
         return TimingReport.zero()
     bank, row = decode(trace.lines, cfg)
-    cls = classify_fast(bank, row, cfg.nbanks)
+    cls = classify_fast(bank, row, cfg.nbanks, cfg.page_open)
     t = cfg.timing_cycles()
     cycles, hits, misses, conflicts = _fast_cycles(trace.n, cls, bank, cfg, t)
     return _channel_report(trace, cfg, cycles, hits, misses, conflicts)
 
 
 def _classify_fast_batch(bank: np.ndarray, row: np.ndarray, valid: np.ndarray,
-                         nbanks: int) -> np.ndarray:
+                         nbanks: int, page_open: bool = True) -> np.ndarray:
     """Batched exact classification on padded [B, L] arrays.  Padding slots
     get sort-key ``nbanks`` (past any real bank) so the stable per-row sort
     orders real requests exactly as the per-trace classifier; entries at
     ``~valid`` positions are garbage and must be masked by the caller."""
     B, L = bank.shape
+    if not page_open:  # closed page: every valid request is a miss
+        return np.ones((B, L), dtype=np.int8)
     bkey = np.where(valid, bank, np.int32(nbanks))
     order = np.argsort(bkey, axis=1, kind="stable")
     sb = np.take_along_axis(bkey, order, axis=1)
@@ -426,7 +464,8 @@ def _simulate_fast_batch(traces: list[Trace], cfg: DRAMConfig) -> list[TimingRep
     batch = TraceBatch.from_traces(traces, cfg, pad_batch=False)
     B, L = batch.bank.shape  # pad_batch=False keeps B == len(traces)
     valid = np.arange(L)[None, :] < batch.lengths[:, None]
-    cls = _classify_fast_batch(batch.bank, batch.row, valid, cfg.nbanks)
+    cls = _classify_fast_batch(batch.bank, batch.row, valid, cfg.nbanks,
+                               cfg.page_open)
     t = cfg.timing_cycles()
     miss_cost = max(t["tRC"], t["tRCD"] + t["tBL"])
     conf_cost = max(t["tRC"], t["tRP"] + t["tRCD"] + t["tBL"])
@@ -438,6 +477,11 @@ def _simulate_fast_batch(traces: list[Trace], cfg: DRAMConfig) -> list[TimingRep
         flat_bank, weights=act_cost.ravel().astype(np.float64),
         minlength=B * cfg.nbanks,
     ).reshape(B, cfg.nbanks)
+    if not cfg.page_open:
+        # closed-page chain bound (see _closed_page_chain_bound); padding is
+        # a suffix, so masking the trailing element of each pair suffices
+        adj = ((batch.bank[:, 1:] == batch.bank[:, :-1]) & valid[:, 1:])
+        adj_counts = adj.sum(axis=1)
     reports = []
     for i, tr in enumerate(traces):
         if tr.n == 0:
@@ -449,6 +493,9 @@ def _simulate_fast_batch(traces: list[Trace], cfg: DRAMConfig) -> list[TimingRep
         conflicts = int(((cls[i] == 2) & v).sum())
         bus_bound = tr.n * t["tBL"]
         bank_bound = int(per_bank[i].max())
+        if not cfg.page_open:
+            bank_bound = max(bank_bound, _closed_page_chain_bound(
+                tr.n, int(adj_counts[i]), t))
         cycles = int(max(bus_bound, bank_bound)) + t["tCL"]
         reports.append(_channel_report(tr, cfg, cycles, hits, misses, conflicts))
     return reports
@@ -525,7 +572,7 @@ def simulate_batch(
             cycles, hits, misses, conflicts = _scan_engine_batch(
                 jnp.asarray(batch.bank), jnp.asarray(batch.row), cfg.nbanks,
                 t["tCL"], t["tRCD"], t["tRP"], t["tRC"], t["tBL"],
-                lookahead=16 * t["tBL"],
+                lookahead=16 * t["tBL"], page_open=cfg.page_open,
             )
             _record_dispatch(len(chunk), int(batch.lengths.sum()))
             cycles, hits, misses, conflicts = (  # one host sync per dispatch
@@ -553,10 +600,18 @@ def simulate_batch(
 
 def _timing_key(cfg: DRAMConfig) -> tuple:
     """Everything of a DRAMConfig that determines a single-channel report:
-    address mapping, cycle timings, and the ns/bandwidth scale factors."""
+    address mapping, page policy, cycle timings, and the ns/bandwidth scale
+    factors.  Two configs with equal keys may share TraceBatch decode and
+    dedup'd reports; any controller knob that changes results must be
+    here."""
     t = cfg.timing_cycles()
-    return (cfg.nbanks, cfg.lines_per_row, t["tCL"], t["tRCD"], t["tRP"],
-            t["tRC"], t["tBL"], cfg.tCK_ns, cfg.bw_per_channel)
+    # mapping.scheme, not the whole AddressMapping: channel_lines only
+    # parameterises the pre-split pseudo-channel deal, never the
+    # single-channel timing, and keying on it would needlessly split
+    # dispatch groups / defeat dedup across granularities
+    return (cfg.nbanks, cfg.lines_per_row, cfg.mapping.scheme,
+            cfg.page_policy, t["tCL"], t["tRCD"], t["tRP"], t["tRC"],
+            t["tBL"], cfg.tCK_ns, cfg.bw_per_channel)
 
 
 def simulate_many(
@@ -596,10 +651,19 @@ def simulate_dram(
     ``batched=True`` (default) times all channels in one grouped dispatch;
     ``batched=False`` keeps the one-dispatch-per-trace path (the
     equivalence oracle for tests and benchmarks).  Results are identical.
+
+    Under HBM pseudo-channel mode each channel trace is dealt across two
+    pseudo-channels (at the mapping's channel-interleave granularity) and
+    every pseudo-channel is timed as an independent narrow channel
+    (``cfg.pseudo_channel_view()``).
     """
     assert len(traces) <= cfg.channels, (
         f"{len(traces)} traces for {cfg.channels}-channel {cfg.name}"
     )
+    if cfg.pseudo_channels:
+        traces = [pc for tr in traces
+                  for pc in split_round_robin(tr, 2, cfg.mapping.channel_lines)]
+        cfg = cfg.pseudo_channel_view()
     if not traces:
         return TimingReport.zero()
     if batched:

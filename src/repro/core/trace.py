@@ -44,6 +44,8 @@ import hashlib
 
 import numpy as np
 
+from repro.core.dram import decode_lines
+
 LINE = 64
 
 # Evaluation strategy of the combinators below: True builds LazyTrace
@@ -140,6 +142,12 @@ class LazyTrace:
         raise NotImplementedError
 
     # ---- O(1) accounting ----
+    def _write_count(self) -> int:
+        """Number of write requests.  Combinators must use this (not
+        ``_wn`` directly): nodes with lazily-resolved write accounting
+        (:class:`_SplitLeaf`) override it."""
+        return self._wn
+
     @property
     def n(self) -> int:
         return self._n
@@ -182,20 +190,16 @@ class LazyTrace:
         raise NotImplementedError
 
     def emit_bank_row(self, bank_out: np.ndarray, row_out: np.ndarray,
-                      lines_per_row: int, nbanks: int,
-                      scratch: np.ndarray | None = None) -> None:
+                      cfg, scratch: np.ndarray | None = None) -> None:
         """Decode this trace's lines straight into ``[L]`` bank/row buffer
-        slices (the fused flatten+pack path of ``TraceBatch``).  ``scratch``
+        slices (the fused flatten+pack path of ``TraceBatch``) under the
+        :class:`repro.core.dram.DRAMConfig`'s address mapping.  ``scratch``
         is an optional reusable int64 buffer of length >= n."""
         if scratch is None or len(scratch) < self._n:
             scratch = np.empty(self._n, dtype=np.int64)
         lines = scratch[: self._n]
         self.emit_lines(lines)
-        q = lines // lines_per_row
-        np.remainder(q, nbanks, out=q)
-        bank_out[:] = q
-        np.floor_divide(lines, lines_per_row * nbanks, out=lines)
-        row_out[:] = lines
+        decode_lines(lines, cfg, bank_out, row_out)
 
 
 class _RangeLeaf(LazyTrace):
@@ -254,7 +258,8 @@ class _Concat(LazyTrace):
                 flat.extend(c.children)
             else:
                 flat.append(c)
-        super().__init__(sum(c.n for c in flat), sum(c._wn for c in flat))
+        super().__init__(sum(c.n for c in flat),
+                         sum(c._write_count() for c in flat))
         self.children = flat
 
     def _emit(self, out: np.ndarray, field: str) -> None:
@@ -283,7 +288,7 @@ class _Merge(LazyTrace):
 
     def __init__(self, children: list, kind: str):
         super().__init__(sum(c.n for c in children),
-                         sum(c._wn for c in children))
+                         sum(c._write_count() for c in children))
         self.children = children
         self.kind = kind  # "rr" | "prop"
         self._order: np.ndarray | None = None
@@ -312,6 +317,75 @@ class _Merge(LazyTrace):
     def _structural_key(self):
         return ("M", self.kind,
                 tuple(c.structural_key() for c in self.children))
+
+
+def _split_len(n: int, k: int, index: int, granularity: int) -> int:
+    """Requests channel ``index`` receives when ``n`` requests are dealt
+    round-robin across ``k`` channels in ``granularity``-request blocks."""
+    g = granularity
+    full, rem = divmod(n, g * k)
+    return full * g + min(max(rem - index * g, 0), g)
+
+
+def _split_positions(n: int, k: int, index: int, granularity: int) -> np.ndarray:
+    """Parent positions of channel ``index``'s share, in parent order."""
+    g = granularity
+    j = np.arange(_split_len(n, k, index, g), dtype=np.int64)
+    return (j // g) * (g * k) + index * g + (j % g)
+
+
+class _SplitLeaf(LazyTrace):
+    """One channel's share of a round-robin channel deal: every k-th
+    ``granularity``-block of the parent stream, starting at block
+    ``index``.  The parent materialises once (cached) and is shared by all
+    k children; each child gathers its strided share on emission, straight
+    into the engine's batch buffers.  Write accounting is resolved lazily
+    (it needs the parent's write flags, unlike the O(1) length)."""
+
+    __slots__ = ("parent", "k", "index", "granularity", "_wn_known")
+
+    def __init__(self, parent: LazyTrace, k: int, index: int,
+                 granularity: int = 1):
+        super().__init__(_split_len(parent.n, k, index, granularity), 0)
+        self.parent = parent
+        self.k = int(k)
+        self.index = int(index)
+        self.granularity = int(granularity)
+        self._wn_known = False
+
+    def _take(self, arr: np.ndarray, out: np.ndarray) -> None:
+        if self.granularity == 1:
+            out[:] = arr[self.index :: self.k]
+        else:
+            np.take(arr, _split_positions(self.parent.n, self.k, self.index,
+                                          self.granularity), out=out)
+
+    def emit_lines(self, out: np.ndarray) -> None:
+        self._take(self.parent.lines, out)
+
+    def emit_writes(self, out: np.ndarray) -> None:
+        self._take(self.parent.is_write, out)
+
+    def _write_count(self) -> int:
+        if not self._wn_known:
+            if self._n:
+                wr = np.empty(self._n, dtype=bool)
+                self.emit_writes(wr)
+                self._wn = int(wr.sum())
+            self._wn_known = True
+        return self._wn
+
+    @property
+    def read_bytes(self) -> int:
+        return (self._n - self._write_count()) * LINE
+
+    @property
+    def write_bytes(self) -> int:
+        return self._write_count() * LINE
+
+    def _structural_key(self):
+        return ("S", self.parent.structural_key(), self.k, self.index,
+                self.granularity)
 
 
 def _as_lazy(t) -> LazyTrace:
@@ -478,7 +552,22 @@ def proportional_interleave(*traces):
     return _merge(traces, "prop")
 
 
-def split_round_robin(t, k: int) -> list[Trace]:
-    """Deal a trace across k channels line-by-line (round-robin share)."""
-    t = materialize(t)
-    return [Trace(t.lines[i::k], t.is_write[i::k]) for i in range(k)]
+def split_round_robin(t, k: int, granularity: int = 1) -> list:
+    """Deal a trace across k channels in ``granularity``-line blocks
+    (round-robin share; granularity 1 is the classic line-by-line deal).
+
+    A lazy trace yields lazy strided-split nodes — the parent stream
+    materialises once and each channel's share decodes straight into the
+    engine's padded batch buffers; an eager trace yields eager slices
+    (the oracle path)."""
+    if granularity < 1:
+        raise ValueError(f"granularity must be >= 1, got {granularity}")
+    if isinstance(t, LazyTrace):
+        return [_SplitLeaf(t, k, i, granularity) for i in range(k)]
+    if granularity == 1:
+        return [Trace(t.lines[i::k], t.is_write[i::k]) for i in range(k)]
+    return [
+        Trace(t.lines[pos], t.is_write[pos])
+        for i in range(k)
+        for pos in (_split_positions(t.n, k, i, granularity),)
+    ]

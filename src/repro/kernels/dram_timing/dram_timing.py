@@ -32,7 +32,7 @@ STATE_BANKS_PAD = 128  # lane-aligned bank-state vectors
 
 
 def _kernel(bank_ref, row_ref, out_ref, state_ref, scalars_ref, *, nbanks,
-            tCL, tRCD, tRP, tRC, tBL, lookahead, block, n_blocks):
+            tCL, tRCD, tRP, tRC, tBL, lookahead, page_open, block, n_blocks):
     """One grid step: consume `block` requests of one batch row.
 
     state_ref: (4, STATE_BANKS_PAD) int32 VMEM scratch
@@ -62,9 +62,16 @@ def _kernel(bank_ref, row_ref, out_ref, state_ref, scalars_ref, *, nbanks,
         valid = b >= 0
         bi = jnp.maximum(b, 0)
         cur = open_row[bi]
-        is_hit = (cur == r) & valid
-        is_miss = (cur == jnp.int32(-1)) & valid
-        is_conf = valid & ~is_hit & ~is_miss
+        if page_open:
+            is_hit = (cur == r) & valid
+            is_miss = (cur == jnp.int32(-1)) & valid
+            is_conf = valid & ~is_hit & ~is_miss
+        else:
+            # closed-page policy: every access auto-precharges, so each
+            # valid request activates (a miss) and conflicts cannot occur
+            is_hit = jnp.bool_(False) & valid
+            is_miss = valid
+            is_conf = jnp.bool_(False) & valid
 
         horizon = jnp.maximum(bus_free - lookahead, 0)
         t_pre = jnp.maximum(last_data[bi], horizon)
@@ -108,7 +115,7 @@ def _kernel(bank_ref, row_ref, out_ref, state_ref, scalars_ref, *, nbanks,
 @functools.partial(
     jax.jit,
     static_argnames=("nbanks", "tCL", "tRCD", "tRP", "tRC", "tBL",
-                     "lookahead", "block", "interpret"),
+                     "lookahead", "page_open", "block", "interpret"),
 )
 def dram_timing_pallas_batch(
     bank: jnp.ndarray,
@@ -121,12 +128,16 @@ def dram_timing_pallas_batch(
     tRC: int,
     tBL: int,
     lookahead: int,
+    page_open: bool = True,
     block: int = 512,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Batched kernel entry: bank/row are [B, L] with L a multiple of
     `block` and padding requests marked bank == -1.  Returns int32[B, 4]:
     per-trace (total_cycles, hits, misses, conflicts) from ONE dispatch.
+
+    ``page_open=False`` compiles the closed-page variant (every request
+    activates; no conflicts) — a trace-time branch, zero cost in-kernel.
     """
     assert nbanks <= STATE_BANKS_PAD
     assert bank.ndim == 2, "batched kernel expects [B, L] request arrays"
@@ -135,7 +146,8 @@ def dram_timing_pallas_batch(
     n_blocks = n // block
     kernel = functools.partial(
         _kernel, nbanks=nbanks, tCL=tCL, tRCD=tRCD, tRP=tRP, tRC=tRC,
-        tBL=tBL, lookahead=lookahead, block=block, n_blocks=n_blocks,
+        tBL=tBL, lookahead=lookahead, page_open=page_open, block=block,
+        n_blocks=n_blocks,
     )
     out = pl.pallas_call(
         kernel,
@@ -166,6 +178,7 @@ def dram_timing_pallas(
     tRC: int,
     tBL: int,
     lookahead: int,
+    page_open: bool = True,
     block: int = 512,
     interpret: bool = True,
 ) -> jnp.ndarray:
@@ -177,6 +190,6 @@ def dram_timing_pallas(
     out = dram_timing_pallas_batch(
         bank.reshape(1, -1), row.reshape(1, -1), nbanks=nbanks, tCL=tCL,
         tRCD=tRCD, tRP=tRP, tRC=tRC, tBL=tBL, lookahead=lookahead,
-        block=block, interpret=interpret,
+        page_open=page_open, block=block, interpret=interpret,
     )
     return out[0]

@@ -22,7 +22,8 @@ from repro.kernels.dram_timing.ref import dram_timing_ref, dram_timing_ref_batch
 def _timing_kwargs(cfg: DRAMConfig) -> dict:
     t = cfg.timing_cycles()
     return dict(nbanks=cfg.nbanks, tCL=t["tCL"], tRCD=t["tRCD"], tRP=t["tRP"],
-                tRC=t["tRC"], tBL=t["tBL"], lookahead=16 * t["tBL"])
+                tRC=t["tRC"], tBL=t["tBL"], lookahead=16 * t["tBL"],
+                page_open=cfg.page_open)
 
 
 def _result(out: np.ndarray) -> dict:

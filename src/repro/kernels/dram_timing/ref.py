@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the dram_timing Pallas kernel: the lax.scan engine
 from repro.core.engine (the simulation environment's ground truth), in
-single-trace and batched (vmapped) form."""
+single-trace and batched (vmapped) form.  ``page_open=False`` selects the
+closed-page variant, matching the kernel's static flag."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -8,22 +9,23 @@ import jax.numpy as jnp
 from repro.core.engine import _scan_engine, _scan_engine_batch
 
 
-def dram_timing_ref(bank, row, *, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead):
+def dram_timing_ref(bank, row, *, nbanks, tCL, tRCD, tRP, tRC, tBL, lookahead,
+                    page_open=True):
     """Returns int32[4]: (total_cycles, hits, misses, conflicts)."""
     cycles, hits, misses, conflicts = _scan_engine(
         jnp.asarray(bank), jnp.asarray(row), nbanks, tCL, tRCD, tRP, tRC, tBL,
-        lookahead,
+        lookahead, page_open,
     )
     return jnp.stack([cycles, hits, misses, conflicts]).astype(jnp.int32)
 
 
 def dram_timing_ref_batch(bank, row, *, nbanks, tCL, tRCD, tRP, tRC, tBL,
-                          lookahead):
+                          lookahead, page_open=True):
     """Batched oracle on [B, L] request arrays: int32[B, 4] per-trace
     (total_cycles, hits, misses, conflicts), matching the batched kernel's
     output layout."""
     cycles, hits, misses, conflicts = _scan_engine_batch(
         jnp.asarray(bank), jnp.asarray(row), nbanks, tCL, tRCD, tRP, tRC, tBL,
-        lookahead,
+        lookahead, page_open,
     )
     return jnp.stack([cycles, hits, misses, conflicts], axis=1).astype(jnp.int32)

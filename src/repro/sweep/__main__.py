@@ -6,8 +6,12 @@
         --workers 4 --cache results/sweep_cache --out results/sweep
 
 ``--channels`` crosses each DRAM preset with explicit channel counts (the
-Tab. 7 axis); ``--list`` prints the expanded scenarios (and what was
-filtered out) without simulating anything.
+Tab. 7 axis); ``--mappings`` / ``--page-policies`` / ``--pseudo-channels``
+cross in the memory-controller axes (e.g. ``--mappings row,bank_xor
+--page-policies open,closed --pseudo-channels 0,1`` — invalid combinations
+such as pseudo-channels on DDR4 are filtered, not errors); ``--list``
+prints the expanded scenarios (and what was filtered out) without
+simulating anything.
 """
 from __future__ import annotations
 
@@ -26,6 +30,19 @@ def _csv_list(text: str) -> tuple[str, ...]:
     return tuple(x for x in text.split(",") if x)
 
 
+_BOOL_TOKENS = {"0": False, "off": False, "false": False, "no": False,
+                "1": True, "on": True, "true": True, "yes": True}
+
+
+def _csv_bools(text: str, flag: str) -> tuple[bool, ...]:
+    vals = []
+    for tok in _csv_list(text):
+        if tok.lower() not in _BOOL_TOKENS:
+            raise ValueError(f"bad {flag} value {tok!r} (use 0/1 or on/off)")
+        vals.append(_BOOL_TOKENS[tok.lower()])
+    return tuple(vals) or (False,)
+
+
 def build_spec(args: argparse.Namespace) -> SweepSpec:
     drams: tuple = _csv_list(args.drams)
     if args.channels:
@@ -39,6 +56,9 @@ def build_spec(args: argparse.Namespace) -> SweepSpec:
         graphs=_csv_list(args.graphs),
         problems=_csv_list(args.problems),
         drams=drams,
+        mappings=_csv_list(args.mappings) or ("row",),
+        page_policies=_csv_list(args.page_policies) or ("open",),
+        pseudo_channels=_csv_bools(args.pseudo_channels, "--pseudo-channels"),
         overrides=overrides,
     )
 
@@ -56,6 +76,14 @@ def main(argv: list[str] | None = None) -> int:
                     help="DRAM presets (default,ddr3,hbm,...)")
     ap.add_argument("--channels", default="",
                     help="optional channel counts crossed with --drams (e.g. 1,2,4)")
+    ap.add_argument("--mappings", default="row",
+                    help="address mappings (row,bank,bank_xor; scheme@lines "
+                         "sets channel-interleave granularity, e.g. row@32)")
+    ap.add_argument("--page-policies", default="open",
+                    help="row-buffer page policies (open,closed)")
+    ap.add_argument("--pseudo-channels", default="0",
+                    help="HBM pseudo-channel axis (comma list of 0/1; "
+                         "1 on non-HBM presets is filtered, not an error)")
     ap.add_argument("--engine", default="", help="DRAM engine override (scan|fast)")
     ap.add_argument("--workers", type=int, default=0,
                     help="process-pool size; <=1 runs serially")
@@ -69,8 +97,8 @@ def main(argv: list[str] | None = None) -> int:
                     help="print expanded scenarios and exit")
     args = ap.parse_args(argv)
 
-    spec = build_spec(args)
     try:
+        spec = build_spec(args)
         spec.expand()
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)

@@ -34,6 +34,9 @@ def result_rows(
             problem=s.problem,
             dram=s.dram.name,
             channels=s.dram.channels,
+            address_mapping=s.dram.mapping.label,
+            page_policy=s.dram.page_policy,
+            pseudo_channels=int(s.dram.pseudo_channels),
             label=s.label,
         )
         if with_status:

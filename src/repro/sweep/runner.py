@@ -261,7 +261,8 @@ def run_sweep(
     say = progress or (lambda msg: None)
     scenarios, skipped = spec.expand()
     for sk in skipped:
-        say(f"[{spec.name}] skip {sk.graph}/{sk.accelerator}/{sk.problem}: {sk.reason}")
+        say(f"[{spec.name}] skip {sk.graph}/{sk.accelerator}/{sk.problem}"
+            f"/{sk.dram}: {sk.reason}")
     cache = ResultCache(cache_dir)
     hashes = [scenario_hash(s) for s in scenarios]
 

@@ -19,7 +19,14 @@ import dataclasses
 from repro.configs.graphsim import default_config
 from repro.core.accelerators import ACCELERATORS
 from repro.core.accelerators.base import AccelConfig
-from repro.core.dram import DRAM_CONFIGS, DRAMConfig, dram_config
+from repro.core.dram import (
+    DRAM_CONFIGS,
+    DRAMConfig,
+    MAPPING_SCHEMES,
+    PAGE_POLICIES,
+    AddressMapping,
+    dram_config,
+)
 from repro.graph.generators import PAPER_GRAPHS, GraphSpec
 from repro.graph.problems import PROBLEMS
 
@@ -59,9 +66,18 @@ class Scenario:
 
     @property
     def scenario_id(self) -> str:
-        """Human-readable identity for progress lines and error reports."""
-        parts = [self.graph.name, self.accelerator, self.problem,
-                 f"{self.dram.name}x{self.dram.channels}"]
+        """Human-readable identity for progress lines and error reports.
+        Memory-controller axes appear only when non-default, so historical
+        ids are unchanged."""
+        dram = f"{self.dram.name}x{self.dram.channels}"
+        if self.dram.pseudo_channels:
+            dram += "-pc"
+        parts = [self.graph.name, self.accelerator, self.problem, dram]
+        m = self.dram.mapping
+        if m.scheme != "row" or m.channel_lines != 1:
+            parts.append(m.label)
+        if self.dram.page_policy != "open":
+            parts.append(self.dram.page_policy)
         if self.label:
             parts.append(self.label)
         return "/".join(parts)
@@ -87,6 +103,20 @@ def _as_dram_axis(d) -> tuple[str, int | None]:
     return d if isinstance(d, tuple) else (d, None)
 
 
+def _as_mapping(m: str | AddressMapping) -> AddressMapping:
+    """Parse a mapping-axis token: an :class:`AddressMapping`, a scheme
+    name (``row`` | ``bank`` | ``bank_xor``), or ``scheme@lines`` with an
+    explicit channel-interleave granularity (e.g. ``row@32``)."""
+    if isinstance(m, AddressMapping):
+        return m
+    scheme, _, g = str(m).partition("@")
+    try:
+        lines = int(g) if g else 1
+    except ValueError:
+        raise ValueError(f"bad channel-interleave granularity in {m!r}")
+    return AddressMapping(scheme, lines)
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
     """Cross-product sweep definition.
@@ -98,10 +128,18 @@ class SweepSpec:
       drams: DRAM preset names, or ``(name, channels)`` pairs; an explicit
         channel count also sets ``n_pes`` on accelerators that pair PEs with
         memory channels (HitGraph, ThunderGP — the paper's Tab. 7 setup).
+      mappings: memory-controller address mappings — scheme names
+        (``row`` | ``bank`` | ``bank_xor``), ``scheme@lines`` tokens with an
+        explicit channel-interleave granularity, or
+        :class:`repro.core.dram.AddressMapping` instances.
+      page_policies: row-buffer page policies (``open`` | ``closed``).
+      pseudo_channels: HBM pseudo-channel mode on/off; ``True`` is filtered
+        to :class:`Skipped` on non-HBM presets.
       overrides: :class:`ConfigOverride` axis (ablations, interval sizes...).
 
-    Expansion order is graphs, accelerators, problems, drams, overrides —
-    stable, so result rows are deterministic regardless of execution order.
+    Expansion order is graphs, accelerators, problems, drams, mappings,
+    page policies, pseudo-channels, overrides — stable, so result rows are
+    deterministic regardless of execution order.
     """
 
     name: str
@@ -109,6 +147,9 @@ class SweepSpec:
     graphs: tuple[str | GraphSpec, ...]
     problems: tuple[str, ...] = ("bfs",)
     drams: tuple[str | tuple[str, int | None], ...] = ("default",)
+    mappings: tuple[str | AddressMapping, ...] = ("row",)
+    page_policies: tuple[str, ...] = ("open",)
+    pseudo_channels: tuple[bool, ...] = (False,)
     overrides: tuple[ConfigOverride, ...] = (ConfigOverride(),)
 
     def _validate(self) -> None:
@@ -130,11 +171,30 @@ class SweepSpec:
                if c is not None and c < 1]
         if bad:
             raise ValueError(f"channel counts must be >= 1, got {bad}")
+        check("address-mapping scheme(s)",
+              [m.scheme if isinstance(m, AddressMapping)
+               else str(m).partition("@")[0] for m in self.mappings],
+              MAPPING_SCHEMES)
+        check("page polic(ies)", self.page_policies, PAGE_POLICIES)
+        bad_pc = [p for p in self.pseudo_channels if not isinstance(p, bool)]
+        if bad_pc:
+            raise ValueError(f"pseudo_channels must be booleans, got {bad_pc}")
+
+    def _memory_axes(self):
+        """The resolved (mapping, page_policy, pseudo_channels) cross
+        product, in spec order."""
+        return [
+            (_as_mapping(m), pp, pc)
+            for m in self.mappings
+            for pp in self.page_policies
+            for pc in self.pseudo_channels
+        ]
 
     def expand(self) -> tuple[list[Scenario], list[Skipped]]:
         self._validate()
         scenarios: list[Scenario] = []
         skipped: list[Skipped] = []
+        mem_axes = self._memory_axes()
         for graph in self.graphs:
             gspec = _as_graph_spec(graph)
             for accel in self.accelerators:
@@ -143,38 +203,71 @@ class SweepSpec:
                     problem = PROBLEMS[prob]
                     for dram_axis in self.drams:
                         dname, channels = _as_dram_axis(dram_axis)
-                        for ov in self.overrides:
-                            def skip(reason: str):
-                                skipped.append(Skipped(
-                                    graph=gspec.name, accelerator=accel,
-                                    problem=prob, dram=dname,
-                                    label=ov.label, reason=reason,
-                                ))
+                        base_dram = DRAM_CONFIGS[dname]
 
-                            if problem.needs_weights and not cls.supports_weights:
-                                skip(f"{accel} does not support weighted problems")
-                                continue
-                            if channels and channels > 1 and not cls.supports_multichannel:
-                                skip(f"{accel} does not support multi-channel memory")
-                                continue
-                            cfg = default_config(accel)
-                            if channels and cls.supports_multichannel:
-                                cfg = dataclasses.replace(cfg, n_pes=channels)
-                            cfg = ov.apply(cfg)
-                            try:
-                                cls(cfg)  # model-side config validation
-                            except ValueError as e:
-                                skip(str(e))
-                                continue
-                            scenarios.append(Scenario(
-                                graph=gspec,
-                                accelerator=accel,
-                                problem=prob,
-                                dram=dram_config(dname, channels=channels),
-                                config=cfg,
-                                root=gspec.root,
-                                label=ov.label,
+                        seen_reasons: set[tuple[str, str]] = set()
+
+                        def skip(reason: str, label: str = ""):
+                            # dedup per (dram axis): the same incompatibility
+                            # recurring across memory-axis combinations is one
+                            # record, not mappings x policies x pc copies
+                            if (reason, label) in seen_reasons:
+                                return
+                            seen_reasons.add((reason, label))
+                            skipped.append(Skipped(
+                                graph=gspec.name, accelerator=accel,
+                                problem=prob, dram=dname,
+                                label=label, reason=reason,
                             ))
+
+                        # axis-independent incompatibilities: one record per
+                        # (graph, accel, problem, dram), not one per memory
+                        # axis x override combination
+                        if problem.needs_weights and not cls.supports_weights:
+                            skip(f"{accel} does not support weighted problems")
+                            continue
+                        if channels and channels > 1 and not cls.supports_multichannel:
+                            skip(f"{accel} does not support multi-channel memory")
+                            continue
+                        for mapping, policy, pc in mem_axes:
+                            reason = None
+                            if pc and base_dram.standard != "HBM":
+                                reason = (f"pseudo-channels require HBM "
+                                          f"({dname} is {base_dram.standard})")
+                            elif mapping.channel_lines != 1 and not pc:
+                                reason = (f"channel-interleave granularity "
+                                          f"({mapping.label}) only acts on the "
+                                          f"pseudo-channel deal")
+                            elif (mapping.scheme == "bank_xor"
+                                    and base_dram.nbanks & (base_dram.nbanks - 1)):
+                                reason = (f"bank_xor needs a power-of-two bank "
+                                          f"count ({dname} has {base_dram.nbanks})")
+                            if reason is not None:
+                                skip(reason)
+                                continue
+                            for ov in self.overrides:
+                                cfg = default_config(accel)
+                                if channels and cls.supports_multichannel:
+                                    cfg = dataclasses.replace(cfg, n_pes=channels)
+                                cfg = ov.apply(cfg)
+                                try:
+                                    cls(cfg)  # model-side config validation
+                                except ValueError as e:
+                                    skip(str(e), ov.label)
+                                    continue
+                                scenarios.append(Scenario(
+                                    graph=gspec,
+                                    accelerator=accel,
+                                    problem=prob,
+                                    dram=dram_config(
+                                        dname, channels=channels,
+                                        mapping=mapping, page_policy=policy,
+                                        pseudo_channels=pc,
+                                    ),
+                                    config=cfg,
+                                    root=gspec.root,
+                                    label=ov.label,
+                                ))
         return scenarios, skipped
 
     def scenarios(self) -> list[Scenario]:

@@ -1,0 +1,444 @@
+"""The pluggable memory-controller layer: address mappings, page policies,
+HBM pseudo-channels, the lazy channel deal, and the sweep axes that expose
+them.  The default configuration (row-interleaved, open page, no
+pseudo-channels) must be byte-identical to the historical behaviour — the
+golden-hash CI job enforces that end to end; here we pin the pieces."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.graphsim import MEMORY_AXES, default_config
+from repro.core.dram import (
+    DRAM_CONFIGS,
+    AddressMapping,
+    DRAMConfig,
+    decode_line_scalar,
+    decode_lines,
+    dram_config,
+)
+from repro.core.engine import (
+    TraceBatch,
+    classify_fast,
+    decode,
+    simulate_batch,
+    simulate_channel_fast,
+    simulate_channel_scan,
+    simulate_dram,
+    simulate_many,
+    simulate_sequential,
+)
+from repro.core.trace import (
+    LazyTrace,
+    Trace,
+    concat,
+    eager_traces,
+    materialize,
+    seq_read,
+    seq_write,
+    split_round_robin,
+)
+from repro.kernels.dram_timing.ops import simulate_trace
+from repro.sweep.results import result_rows
+from repro.sweep.spec import SweepSpec
+
+
+def _mixed_trace(n=2048, seed=0, spread=1 << 16) -> Trace:
+    rng = np.random.default_rng(seed)
+    lines = np.concatenate([
+        np.arange(n // 2, dtype=np.int64),
+        rng.integers(0, spread, size=n - n // 2),
+    ])
+    return Trace(lines, rng.random(n) < 0.3)
+
+
+# ---------------- ns_to_cycles rounding (satellite regression) --------------
+
+
+def test_ns_to_cycles_rounds_half_up():
+    # data_rate 1000 -> tCK = 2.0 ns; 5 ns = 2.5 cycles must round UP to 3.
+    # Python's round() would give 2 (banker's rounding to even).
+    cfg = dataclasses.replace(DRAM_CONFIGS["hbm"], tCL_ns=5.0)
+    assert round(2.5) == 2  # the trap this satellite pins down
+    assert cfg.ns_to_cycles(5.0) == 3
+    assert cfg.tCL == 3
+    # .5 boundaries rounding to odd agreed between the two schemes; they
+    # must keep doing so (11 ns / 2.0 ns = 5.5 -> 6)
+    assert DRAM_CONFIGS["hbm"].tCL == 6
+
+
+def test_preset_timing_cycles_pinned():
+    """The derived cycle counts of every preset, pinned so a rounding-rule
+    change can never silently shift timing results."""
+    expected = {
+        "accugraph": dict(tCL=13, tRCD=13, tRP=13, tRC=34, tBL=4),
+        "foregraph": dict(tCL=13, tRCD=13, tRP=13, tRC=34, tBL=4),
+        "hitgraph": dict(tCL=9, tRCD=9, tRP=9, tRC=22, tBL=4),
+        "thundergp": dict(tCL=13, tRCD=13, tRP=13, tRC=34, tBL=4),
+        "default": dict(tCL=13, tRCD=13, tRP=13, tRC=34, tBL=4),
+        "ddr3": dict(tCL=12, tRCD=12, tRP=12, tRC=30, tBL=4),
+        "hbm": dict(tCL=6, tRCD=6, tRP=6, tRC=14, tBL=2),
+    }
+    for name, cyc in expected.items():
+        assert DRAM_CONFIGS[name].timing_cycles() == cyc, name
+
+
+# ---------------- address mappings ------------------------------------------
+
+
+def test_mapping_validation():
+    with pytest.raises(ValueError, match="unknown address-mapping"):
+        AddressMapping("diagonal")
+    with pytest.raises(ValueError, match="channel_lines"):
+        AddressMapping("row", 0)
+    with pytest.raises(ValueError, match="page policy"):
+        dram_config("default", page_policy="ajar")
+    assert AddressMapping("bank_xor", 32).label == "bank_xor@32"
+    assert AddressMapping("row").label == "row"
+
+
+def test_default_mapping_is_byte_identical_to_historical_decode():
+    cfg = dram_config("default")
+    lines = _mixed_trace(4096, seed=1).lines
+    bank, row = decode(lines, cfg)
+    lpr, nb = cfg.lines_per_row, cfg.nbanks
+    np.testing.assert_array_equal(bank, ((lines // lpr) % nb).astype(np.int32))
+    np.testing.assert_array_equal(row, (lines // (lpr * nb)).astype(np.int32))
+
+
+@pytest.mark.parametrize("scheme", ["row", "bank", "bank_xor"])
+@pytest.mark.parametrize("preset", ["default", "hbm", "hitgraph"])
+def test_mapping_is_bijective_on_line_space(scheme, preset):
+    """Every mapping must hit each (bank, row, col) triple exactly once over
+    a whole number of row spans — no aliasing, no holes."""
+    cfg = dram_config(preset, mapping=scheme)
+    nrows = 4
+    n = cfg.lines_per_row * cfg.nbanks * nrows
+    lines = np.arange(n, dtype=np.int64)
+    bank, row = decode_lines(lines, cfg)
+    col = np.array([decode_line_scalar(i, cfg)[2] for i in range(n)])
+    triples = set(zip(bank.tolist(), row.tolist(), col.tolist()))
+    assert len(triples) == n
+    assert bank.min() == 0 and bank.max() == cfg.nbanks - 1
+    assert row.min() == 0 and row.max() == nrows - 1
+
+
+@pytest.mark.parametrize("scheme", ["row", "bank", "bank_xor"])
+def test_vectorised_decode_matches_scalar_reference(scheme):
+    cfg = dram_config("hbm", mapping=scheme)
+    rng = np.random.default_rng(7)
+    lines = rng.integers(0, 1 << 24, size=512)
+    bank, row = decode_lines(lines, cfg)
+    for i, line in enumerate(lines.tolist()):
+        b, r, _ = decode_line_scalar(line, cfg)
+        assert (bank[i], row[i]) == (b, r), (scheme, line)
+
+
+def test_bank_xor_requires_pow2_banks():
+    cfg = dataclasses.replace(
+        dram_config("default", mapping="bank_xor"), banks_per_rank=12)
+    with pytest.raises(ValueError, match="power-of-two"):
+        decode_lines(np.arange(10, dtype=np.int64), cfg)
+
+
+def test_mappings_change_conflict_profile():
+    """A strided pattern that ping-pongs rows in one bank under the row
+    mapping should spread under bank interleaving and the XOR permutation."""
+    cfg_row = dram_config("default")
+    lpr, nb = cfg_row.lines_per_row, cfg_row.nbanks
+    lines = np.ravel(np.array([[0, lpr * nb]] * 200))  # bank 0, rows 0/1
+    tr = Trace(lines, np.zeros(len(lines), dtype=bool))
+    r_row = simulate_channel_scan(tr, cfg_row)
+    r_xor = simulate_channel_scan(tr, dram_config("default", mapping="bank_xor"))
+    assert r_row.conflicts == len(lines) - 1
+    assert r_xor.conflicts == 0  # rows 0/1 permute to different banks
+    assert r_xor.time_ns < r_row.time_ns
+
+
+# ---------------- page policies ---------------------------------------------
+
+
+def test_closed_page_counts_every_request_as_miss():
+    cfg = dram_config("default", page_policy="closed")
+    tr = _mixed_trace(1500, seed=2)
+    r = simulate_channel_scan(tr, cfg)
+    assert (r.hits, r.conflicts) == (0, 0)
+    assert r.misses == tr.n
+    cls = classify_fast(*decode(tr.lines, cfg), cfg.nbanks, cfg.page_open)
+    assert (cls == 1).all()
+
+
+def test_closed_page_slower_than_open_on_sequential_stream():
+    tr = seq_read(0, 1 << 20)
+    open_r = simulate_channel_scan(materialize(tr), dram_config("default"))
+    closed_r = simulate_channel_scan(
+        materialize(tr), dram_config("default", page_policy="closed"))
+    assert closed_r.time_ns > 2 * open_r.time_ns  # activates on critical path
+    assert closed_r.bytes_total == open_r.bytes_total
+
+
+def test_closed_page_batched_fast_and_scan_consistent():
+    cfg = dram_config("hbm", page_policy="closed")
+    traces = [_mixed_trace(700, seed=s) for s in range(4)] + [Trace.empty()]
+    seq = simulate_sequential(traces, cfg)
+    bat = simulate_batch(traces, cfg)
+    assert seq == bat
+    # the fast engine shares the classification exactly and its closed-page
+    # chain bound keeps the time estimate in the scan engine's ballpark
+    for tr in traces[:2]:
+        rs = simulate_channel_scan(tr, cfg)
+        rf = simulate_channel_fast(tr, cfg)
+        assert (rf.hits, rf.misses, rf.conflicts) == (rs.hits, rs.misses, rs.conflicts)
+        assert 0.5 < rf.time_ns / rs.time_ns < 2.0
+
+
+def test_closed_page_pallas_kernel_matches_scan_engine():
+    cfg = dram_config("hbm", page_policy="closed")
+    tr = _mixed_trace(600, seed=3)
+    kernel = simulate_trace(tr, cfg, use_pallas=True, block=128, interpret=True)
+    oracle = simulate_trace(tr, cfg, use_pallas=False)
+    assert kernel == oracle
+    assert kernel["hits"] == 0 and kernel["conflicts"] == 0
+
+
+def test_timing_key_separates_mapping_and_policy():
+    """simulate_many must not share dedup'd reports across configs that
+    differ only in the controller knobs."""
+    tr = concat(seq_read(0, 40000), seq_write(1 << 20, 9000))
+    cfgs = [
+        dram_config("default"),
+        dram_config("default", mapping="bank"),
+        dram_config("default", page_policy="closed"),
+    ]
+    reports = simulate_many([(tr, c, "auto", 2_000_000) for c in cfgs])
+    singles = [simulate_dram([tr], c) for c in cfgs]
+    for got, want in zip(reports, singles):
+        assert got == want
+    assert len({r.cycles for r in reports}) == 3  # all three corners differ
+
+
+# ---------------- pseudo-channels -------------------------------------------
+
+
+def test_pseudo_channels_require_hbm():
+    with pytest.raises(ValueError, match="HBM"):
+        dram_config("default", pseudo_channels=True)
+
+
+def test_pseudo_channel_view_halves_width_and_banks():
+    cfg = dram_config("hbm", pseudo_channels=True)
+    pc = cfg.pseudo_channel_view()
+    assert pc.channels == 2 * cfg.channels
+    assert pc.nbanks == cfg.nbanks // 2
+    assert pc.bw_per_channel == cfg.bw_per_channel / 2
+    assert pc.tBL == 2 * cfg.tBL
+    assert not pc.pseudo_channels
+    assert pc.pseudo_channel_view() is pc  # idempotent
+    # defaults stay untouched
+    assert dram_config("hbm").pseudo_channel_view() is DRAM_CONFIGS["hbm"]
+
+
+def test_simulate_dram_pseudo_channels_equals_manual_split():
+    cfg = dram_config("hbm", pseudo_channels=True)
+    tr = _mixed_trace(3000, seed=4)
+    got = simulate_dram([tr], cfg)
+    pcs = split_round_robin(tr, 2)
+    want = simulate_dram(pcs, cfg.pseudo_channel_view())
+    assert got == want
+    assert got.channels_used == 2
+    assert got.requests == tr.n
+
+
+def test_accelerator_semantics_unchanged_across_memory_axes(small_rmat):
+    """The controller axes are timing-only: values and iteration counts
+    must match the default run bit-for-bit, while timing moves."""
+    from repro.core.accelerators import ACCELERATORS
+    from repro.graph.problems import PROBLEMS
+
+    root = int(np.argmax(small_rmat.degrees_out))
+    accel = ACCELERATORS["accugraph"](default_config("accugraph"))
+    base = accel.run(small_rmat, PROBLEMS["bfs"], root=root, dram="hbm")
+    times = {base.timing.time_ns}
+    for dram in (
+        dram_config("hbm", page_policy="closed"),
+        dram_config("hbm", mapping="bank"),
+        dram_config("hbm", pseudo_channels=True),
+    ):
+        rep = accel.run(small_rmat, PROBLEMS["bfs"], root=root, dram=dram)
+        np.testing.assert_array_equal(rep.values, base.values)
+        assert rep.iterations == base.iterations
+        assert rep.timing.bytes_total == base.timing.bytes_total
+        times.add(rep.timing.time_ns)
+    assert len(times) == 4  # every axis actually moved the clock
+
+
+# ---------------- lazy channel deal (split_round_robin) ---------------------
+
+
+def test_split_round_robin_lazy_matches_eager():
+    def build():
+        return concat(seq_read(0, 5000), seq_write(1 << 20, 3000),
+                      seq_read(1 << 22, 800))
+
+    lazy_parts = split_round_robin(build(), 3)
+    with eager_traces():
+        eager_parts = split_round_robin(build(), 3)
+    for lp, ep in zip(lazy_parts, eager_parts):
+        assert isinstance(lp, LazyTrace) and isinstance(ep, Trace)
+        assert lp.n == ep.n
+        m = materialize(lp)
+        np.testing.assert_array_equal(m.lines, ep.lines)
+        np.testing.assert_array_equal(m.is_write, ep.is_write)
+
+
+@pytest.mark.parametrize("n,k,g", [(17, 2, 1), (64, 3, 4), (100, 4, 8),
+                                   (5, 4, 2), (0, 2, 3), (33, 5, 33)])
+def test_split_round_robin_granularity_partitions(n, k, g):
+    lines = np.arange(n, dtype=np.int64)
+    t = Trace(lines, lines % 3 == 0)
+    parts = split_round_robin(t, k, g)
+    assert sum(p.n for p in parts) == n
+    # block b of the parent (size g) lands wholly on channel b % k
+    for i, p in enumerate(parts):
+        assert ((p.lines // g) % k == i).all()
+    back = np.sort(np.concatenate([p.lines for p in parts]))
+    np.testing.assert_array_equal(back, lines)
+
+
+def test_split_nodes_compose_with_correct_write_accounting():
+    """Regression: combinators must resolve a split child's lazily-computed
+    write count instead of reading the base node's placeholder 0."""
+    from repro.core.trace import round_robin
+
+    parts = split_round_robin(seq_write(0, 6400), 2)
+    c = concat(parts[0], seq_read(1 << 20, 640))
+    assert c.write_bytes == parts[0].n * 64
+    assert c.write_bytes == int(materialize(c).is_write.sum()) * 64
+    m = round_robin(parts[1], seq_read(1 << 21, 320))
+    assert m.write_bytes == parts[1].n * 64
+
+
+def test_split_accounting_is_lazy_and_exact():
+    parent = concat(seq_read(0, 6400), seq_write(1 << 18, 6400))
+    parts = split_round_robin(parent, 2)
+    assert parts[0].n + parts[1].n == parent.n
+    assert parent._mat is None  # length accounting materialised nothing
+    total_w = sum(p.write_bytes for p in parts)
+    assert total_w == parent.write_bytes  # write split resolved on demand
+    keys = {p.structural_key() for p in parts}
+    assert len(keys) == 2  # channels are structurally distinct
+
+
+@pytest.mark.parametrize("scheme", ["row", "bank", "bank_xor"])
+def test_fused_emit_matches_pure_decode_for_every_scheme(scheme):
+    """TraceBatch's in-place emit_bank_row path and the allocating decode
+    must agree under every mapping (they share decode_lines but take
+    different branches)."""
+    cfg = dram_config("hbm", mapping=scheme)
+    lazy = [concat(seq_read(0, 7000), seq_write(1 << 21, 1500)),
+            concat(_mixed_trace(900, seed=8), seq_read(1 << 23, 640))]
+    eager = [materialize(t) for t in lazy]
+    lb = TraceBatch.from_traces(lazy, cfg)
+    for i, t in enumerate(eager):
+        bank, row = decode(t.lines, cfg)
+        np.testing.assert_array_equal(lb.bank[i, : t.n], bank)
+        np.testing.assert_array_equal(lb.row[i, : t.n], row)
+
+
+def test_split_nodes_decode_into_trace_batch():
+    cfg = dram_config("hitgraph")
+    parent = concat(seq_read(0, 9000), seq_write(1 << 21, 5000))
+    lazy_parts = split_round_robin(parent, 4)
+    eager_parts = [materialize(p) for p in lazy_parts]
+    lb = TraceBatch.from_traces(lazy_parts, cfg)
+    eb = TraceBatch.from_traces(eager_parts, cfg)
+    np.testing.assert_array_equal(lb.bank, eb.bank)
+    np.testing.assert_array_equal(lb.row, eb.row)
+
+
+# ---------------- sweep axes ------------------------------------------------
+
+
+def _axes_spec(**kw) -> SweepSpec:
+    base = dict(name="mem", accelerators=("accugraph",), graphs=("sd",),
+                problems=("bfs",))
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def test_sweep_expands_memory_axes():
+    spec = _axes_spec(drams=("hbm",), **MEMORY_AXES)
+    scenarios, skipped = spec.expand()
+    assert len(scenarios) == 3 * 2 * 2  # mappings x policies x pc
+    assert not skipped
+    ids = {s.scenario_id for s in scenarios}
+    assert "sd/accugraph/bfs/hbmx1" in ids  # default corner keeps its id
+    assert "sd/accugraph/bfs/hbmx1-pc/bank_xor/closed" in ids
+
+
+def test_sweep_filters_pseudo_channels_on_non_hbm():
+    spec = _axes_spec(drams=("default",), pseudo_channels=(False, True))
+    scenarios, skipped = spec.expand()
+    assert len(scenarios) == 1 and len(skipped) == 1
+    assert "HBM" in skipped[0].reason
+
+
+def test_sweep_rejects_unknown_memory_axis_values():
+    with pytest.raises(ValueError, match="address-mapping"):
+        _axes_spec(mappings=("diagonal",)).expand()
+    with pytest.raises(ValueError, match="page polic"):
+        _axes_spec(page_policies=("ajar",)).expand()
+
+
+def test_sweep_mapping_tokens_set_granularity():
+    spec = _axes_spec(drams=("hbm",), mappings=("row@32",),
+                      pseudo_channels=(True,))
+    (s,), _ = spec.expand()
+    assert s.dram.mapping.channel_lines == 32
+    assert s.dram.pseudo_channels
+
+
+def test_sweep_filters_granularity_without_pseudo_channels():
+    """channel_lines only acts on the pseudo-channel deal; without pc the
+    axis would produce distinct cache entries with identical results."""
+    spec = _axes_spec(drams=("hbm",), mappings=("row@32",))
+    scenarios, skipped = spec.expand()
+    assert not scenarios and len(skipped) == 1
+    assert "pseudo-channel" in skipped[0].reason
+
+
+def test_sweep_skip_records_deduped_across_memory_axes():
+    """An axis-independent incompatibility must yield one Skipped record,
+    not mappings x policies x pseudo-channels copies."""
+    spec = _axes_spec(problems=("sssp",), drams=("hbm",), **MEMORY_AXES)
+    scenarios, skipped = spec.expand()
+    assert not scenarios
+    assert len(skipped) == 1
+    assert "weighted" in skipped[0].reason
+
+
+def test_result_rows_carry_memory_axis_columns():
+    from repro.sweep.runner import ScenarioResult, SweepResult
+
+    spec = _axes_spec(drams=("hbm",), page_policies=("closed",))
+    (s,), _ = spec.expand()
+    res = SweepResult("mem", [ScenarioResult(s, "h", "error",
+                                             dict(status="error", error="x"))], [])
+    (row,) = result_rows(res)
+    assert row["address_mapping"] == "row"
+    assert row["page_policy"] == "closed"
+    assert row["pseudo_channels"] == 0
+
+
+def test_sweep_cli_accepts_memory_axes(capsys):
+    from repro.sweep.__main__ import main
+
+    rc = main(["--accels", "accugraph", "--graphs", "sd", "--problems", "bfs",
+               "--drams", "hbm", "--mappings", "row,bank_xor",
+               "--page-policies", "open,closed", "--pseudo-channels", "0,1",
+               "--list"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "8 scenarios, 0 skipped" in out
+    assert "hbmx1-pc/bank_xor/closed" in out
+    assert main(["--mappings", "spiral", "--list"]) == 2
