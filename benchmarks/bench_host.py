@@ -27,14 +27,13 @@ device timing vs finalize) is written to ``BENCH_host.json``.
 from __future__ import annotations
 
 import argparse
-import hashlib
 import json
 import time
 
 from repro.core import hostcache
 from repro.core.accelerators import ACCELERATORS
 from repro.core.engine import simulate_many
-from repro.core.trace import eager_traces, materialize
+from repro.core.trace import eager_traces, trace_stream_hash
 from repro.graph.problems import PROBLEMS
 from repro.sweep.spec import SweepSpec
 
@@ -92,14 +91,7 @@ def _run_chunk(scenarios) -> tuple[list, dict, list[str]]:
         at += len(trs)
     finalize_wall = time.time() - t2
 
-    hashes = []
-    for trs in traces:
-        h = hashlib.sha256()
-        for tr in trs:
-            m = materialize(tr)
-            h.update(m.lines.tobytes())
-            h.update(m.is_write.tobytes())
-        hashes.append(h.hexdigest())
+    hashes = [trace_stream_hash(trs) for trs in traces]
 
     walls = dict(
         host_prepare_s=round(host_wall, 4),

@@ -60,3 +60,12 @@ MEMORY_SENSITIVITY_AXES: dict[str, tuple] = dict(
     page_policies=("open", "closed"),
     pseudo_channels=(False, True),
 )
+
+# Graph-layout scenario axes (SweepSpec fields of the same names).  The
+# defaults — identity vertex order, scale-1 intervals — reproduce the
+# generator's layout exactly; the cross product is the partitioning
+# sensitivity study (benchmarks/bench_partition.py → BENCH_partition.json).
+LAYOUT_AXES: dict[str, tuple] = dict(
+    reorders=("identity", "degree", "bfs", "random"),
+    interval_scales=(1, 2),
+)

@@ -45,6 +45,7 @@ from repro.core.trace import (
     round_robin,
     seq_read,
 )
+from repro.graph.layout import partition_balance
 from repro.graph.partition import horizontal_partition
 from repro.graph.problems import Problem
 from repro.graph.structure import Graph
@@ -65,17 +66,23 @@ class AccuGraph(Accelerator):
         ud, inv = np.unique(dst, return_inverse=True)
         return g.src[idx], dst, ud, inv
 
-    def _execute(self, g: Graph, problem: Problem, root: int):
+    def _execute(self, g: Graph, problem: Problem, root: int,
+                 init=None):
         cfg = self.config
-        parts = horizontal_partition(g, cfg.interval_size, by="src")
+        ivl = cfg.effective_interval
+        parts = horizontal_partition(g, ivl, by="src")
         k = parts.k
+        extras = dict(
+            effective_interval=ivl,
+            balance=partition_balance([len(parts.edge_idx[p]) for p in range(k)]),
+        )
         layout = MemoryLayout()
         layout.alloc("values", g.n * 4)
         for p in range(k):
             layout.alloc(f"ptrs{p}", (g.n + 1) * 4)
             layout.alloc(f"neigh{p}", max(len(parts.edge_idx[p]), 1) * 4)
 
-        values = problem.init_values(g, root)
+        values = problem.init_values(g, root) if init is None else init.copy()
         src_deg = g.degrees_out.astype(np.float32) if problem.name == "pr" else None
         # Static per-partition structure, hoisted out of the iteration loop:
         # edge endpoints (sorted by destination = CSR order) and the unique
@@ -83,7 +90,7 @@ class AccuGraph(Accelerator):
         # touches only the vertices this partition can update instead of
         # allocating and scanning O(|V|) scratch per partition.
         part_edges = ARTIFACTS.get_or_build(
-            (g.fingerprint, "accugraph.edges", cfg.interval_size),
+            (g.fingerprint, "accugraph.edges", ivl),
             lambda: [self._partition_edges(g, parts.edge_idx[p]) for p in range(k)],
         )
 
@@ -128,7 +135,7 @@ class AccuGraph(Accelerator):
                     values[ud] = new
                     if len(wchanged):
                         any_change = True
-                        dirty[np.unique(wchanged // cfg.interval_size)] = True
+                        dirty[np.unique(wchanged // ivl)] = True
                 else:
                     cand = problem.edge_candidates_np(
                         src_vals, None,
@@ -168,4 +175,4 @@ class AccuGraph(Accelerator):
             if problem.kind == "min" and (not any_change or (skip_part and not dirty.any())):
                 break
 
-        return values, iters, pt, stats
+        return values, iters, pt, stats, extras

@@ -29,6 +29,13 @@ from repro.core.engine import (
 from repro.core.hostcache import ARTIFACTS, SEMANTICS
 from repro.core.metrics import IterationStats, SimReport
 from repro.core.trace import Trace, split_round_robin
+from repro.graph.layout import (
+    relabel_graph,
+    relabel_values,
+    undo_relabel,
+    validate_interval_scale,
+    validate_reorder,
+)
 from repro.graph.problems import Problem
 from repro.graph.structure import Graph
 
@@ -44,6 +51,12 @@ class AccelConfig:
     optimizations: which of the accelerator's optimizations are on.  "all"
       enables every optimization the accelerator proposes (paper default).
     engine: DRAM engine selection ("auto" | "scan" | "fast").
+    reorder: vertex reordering applied before partitioning
+      ("identity" | "degree" | "random" | "bfs" — repro.graph.layout);
+      results are mapped back to original ids, so semantics are unchanged.
+    interval_scale: power-of-two multiplier on ``interval_size`` (the
+      partition-granularity sweep axis; ``effective_interval`` is the
+      product the partitioners actually see).
     """
 
     interval_size: int = 16384
@@ -52,6 +65,17 @@ class AccelConfig:
     engine: str = "auto"
     max_iters: int = 4000
     scan_cutoff: int = SCAN_CUTOFF
+    reorder: str = "identity"
+    interval_scale: int = 1
+
+    def __post_init__(self):
+        validate_reorder(self.reorder)
+        validate_interval_scale(self.interval_scale)
+
+    @property
+    def effective_interval(self) -> int:
+        """The interval size the partitioners see: base size x scale."""
+        return self.interval_size * self.interval_scale
 
     def has(self, opt: str) -> bool:
         return "all" in self.optimizations or opt in self.optimizations
@@ -191,6 +215,9 @@ class PendingRun:
     iterations: int
     pt: PhasedTrace
     stats: list[IterationStats]
+    # layout record: reorder, interval_scale, effective_interval (the
+    # interval the partitioner actually used) and partition balance metrics
+    layout: dict = dataclasses.field(default_factory=dict)
 
     def traces(self) -> list[Trace]:
         return self.pt.flatten()[0]
@@ -215,6 +242,7 @@ class PendingRun:
             iterations=self.iterations,
             per_iteration=self.stats,
             values=self.values,
+            layout=self.layout,
         )
 
 
@@ -222,7 +250,8 @@ class Accelerator(abc.ABC):
     """Base accelerator model.
 
     Subclasses implement ``_execute`` which performs the semantic iteration
-    under the accelerator's scheme and fills a PhasedTrace + IterationStats.
+    under the accelerator's scheme and fills a PhasedTrace + IterationStats,
+    plus a small ``extras`` dict (effective interval, partition balance).
     """
 
     name: str = "base"
@@ -235,8 +264,13 @@ class Accelerator(abc.ABC):
 
     @abc.abstractmethod
     def _execute(
-        self, g: Graph, problem: Problem, root: int
-    ) -> tuple[np.ndarray, int, PhasedTrace, list[IterationStats]]:
+        self, g: Graph, problem: Problem, root: int,
+        init: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, int, PhasedTrace, list[IterationStats], dict]:
+        """``init`` overrides ``problem.init_values`` — the layout layer
+        passes the original-space initial values carried through the vertex
+        relabeling, so per-vertex payloads (SpMV's x vector, WCC's id
+        labels) follow their vertices instead of their slots."""
         ...
 
     def prepare(
@@ -254,7 +288,14 @@ class Accelerator(abc.ABC):
         prepared (symmetrised/weighted) graph by content fingerprint, and
         the whole semantic execution by (graph, problem, root, semantic
         config) — it is DRAM-independent, so a DDR3/DDR4/HBM sweep of one
-        scenario assembles traces once."""
+        scenario assembles traces once.
+
+        The layout axis resolves here: a non-identity ``config.reorder``
+        relabels the prepared graph (and the root) before ``_execute`` and
+        maps the final values back to original ids afterwards, so callers
+        compare against ``reference_solve`` unchanged.  The relabeled graph
+        carries its own content fingerprint, so reordered partition indices
+        and semantic executions cache independently of the identity layout."""
         if problem.needs_weights and not self.supports_weights:
             raise ValueError(f"{self.name} does not support weighted problems")
         if isinstance(dram, str):
@@ -264,16 +305,39 @@ class Accelerator(abc.ABC):
             (g.fingerprint, "prepared", problem.name),
             lambda: problem.prepare_graph(g),
         )
-        values, iters, pt, stats = SEMANTICS.get_or_build(
-            (gp.fingerprint, self.name, problem.name, root,
+        perm = None
+        gx, root_x = gp, root
+        if self.config.reorder != "identity":
+            gx, perm = relabel_graph(gp, self.config.reorder)
+            root_x = int(perm[root])
+
+        def execute():
+            # per-vertex initial payloads (SpMV's x, WCC's labels) must
+            # follow their vertices through the relabeling; built inside
+            # the cache miss so a SEMANTICS hit pays no O(n) init work
+            init = None
+            if perm is not None:
+                init = relabel_values(problem.init_values(gp, root), perm)
+            return self._execute(gx, problem, root_x, init)
+
+        values, iters, pt, stats, extras = SEMANTICS.get_or_build(
+            (gx.fingerprint, self.name, problem.name, root_x,
              self.config.semantic_key()),
-            lambda: self._execute(gp, problem, root),
+            execute,
         )
         # hand out copies of the mutable pieces: a caller mutating
-        # report.values or an IterationStats must not corrupt the cached
-        # execution (the PhasedTrace is shared — trace nodes are immutable)
-        values = values.copy()
+        # report.values, an IterationStats or a balance dict must not
+        # corrupt the cached execution (the PhasedTrace is shared — trace
+        # nodes are immutable); undo_relabel's gather already allocates
         stats = [dataclasses.replace(s) for s in stats]
+        if perm is not None:
+            values = undo_relabel(values, perm, problem.name)
+        else:
+            values = values.copy()
+        layout = dict(reorder=self.config.reorder,
+                      interval_scale=self.config.interval_scale,
+                      **{k: dict(v) if isinstance(v, dict) else v
+                         for k, v in extras.items()})
         # pseudo-channel mode resolves here, so PendingRun.traces() and
         # PendingRun.dram are consistent for external batchers (the sweep
         # runner times traces() against dram directly)
@@ -290,6 +354,7 @@ class Accelerator(abc.ABC):
             iterations=iters,
             pt=pt,
             stats=stats,
+            layout=layout,
         )
 
     def run(

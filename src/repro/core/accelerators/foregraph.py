@@ -22,6 +22,8 @@ Optimizations (paper Sect. 4.5):
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from repro.core.accelerators.base import (
@@ -39,9 +41,16 @@ from repro.core.trace import (
     seq_read,
     seq_write,
 )
+from repro.graph.layout import partition_balance, relabel_values, undo_relabel
 from repro.graph.partition import interval_shard_partition, stride_mapping
 from repro.graph.problems import Problem
 from repro.graph.structure import Graph
+
+INTERVAL_CAP = 65536  # 16-bit local vertex ids in the compressed edge format
+
+# effective-interval clamps already warned about (one warning per distinct
+# (interval_size, interval_scale) pair, not one per execution)
+_CLAMP_WARNED: set[tuple[int, int]] = set()
 
 
 class ForeGraph(Accelerator):
@@ -52,22 +61,37 @@ class ForeGraph(Accelerator):
 
     def __init__(self, config=None):
         super().__init__(config)
-        if self.config.interval_size > 65536:
-            raise ValueError("ForeGraph intervals are limited to 65,536 vertices")
+        if self.config.effective_interval > INTERVAL_CAP:
+            raise ValueError(
+                f"ForeGraph intervals are limited to 65,536 vertices; "
+                f"interval_size={self.config.interval_size} x "
+                f"interval_scale={self.config.interval_scale} = "
+                f"{self.config.effective_interval}")
 
-    def _execute(self, g: Graph, problem: Problem, root: int):
+    def _execute(self, g: Graph, problem: Problem, root: int,
+                 init=None):
         cfg = self.config
         n_pes = max(cfg.n_pes, 1)
-        interval = min(cfg.interval_size, 65536)
+        interval = cfg.effective_interval
+        if interval > INTERVAL_CAP:
+            # __init__ rejects this; a config swapped in after construction
+            # can still reach it — clamp loudly (once per config) instead of
+            # silently, and report the interval actually used
+            key = (cfg.interval_size, cfg.interval_scale)
+            if key not in _CLAMP_WARNED:
+                _CLAMP_WARNED.add(key)
+                warnings.warn(
+                    f"ForeGraph effective interval {interval} exceeds the "
+                    f"{INTERVAL_CAP} 16-bit local-id cap; clamping to "
+                    f"{INTERVAL_CAP}", UserWarning, stacklevel=2)
+            interval = INTERVAL_CAP
 
-        inverse = None
+        sperm = None
         if cfg.has("stride_mapping"):
             q_est = max(1, -(-g.n // interval))
-            perm = stride_mapping(g.n, q_est)
-            inverse = np.empty(g.n, dtype=np.int64)
-            inverse[perm] = np.arange(g.n)
-            g = g.renamed(perm)
-            root = int(perm[root])
+            sperm = stride_mapping(g.n, q_est)
+            g = g.renamed(sperm)
+            root = int(sperm[root])
 
         shards = interval_shard_partition(g, interval)
         q = shards.q
@@ -87,12 +111,24 @@ class ForeGraph(Accelerator):
                 },
             ),
         )
+        # balance over the q x q shard grid (shards ARE ForeGraph's
+        # partitions); shard_fill = fraction of non-empty shards — the
+        # id-locality effect behind the paper's ForeGraph numbers
+        extras = dict(
+            effective_interval=interval,
+            balance=partition_balance(sizes.ravel(), total_slots=q * q),
+        )
         for i in range(q):
             for j in range(q):
                 if sizes[i, j]:
                     layout.alloc(f"sh{i}_{j}", int(sizes[i, j]) * 4)  # 4B compressed edges
 
-        values = problem.init_values(g, root)
+        if init is None:
+            values = problem.init_values(g, root)
+        else:
+            # the passed init is in pre-stride id space: carry each
+            # vertex's payload through the stride renaming as well
+            values = relabel_values(init, sperm) if sperm is not None else init.copy()
         src_deg = g.degrees_out.astype(np.float32) if problem.name == "pr" else None
 
         shuffle = cfg.has("edge_shuffling") and n_pes > 1
@@ -188,17 +224,8 @@ class ForeGraph(Accelerator):
             if problem.kind == "min" and (not any_change or (skip and not dirty.any())):
                 break
 
-        if inverse is not None:
-            # values are indexed by renamed ids; out[old] = values[perm[old]]
-            # where perm = argsort(inverse) (inverse[new] = old).
-            values = values[np.argsort(inverse)]
-            if problem.name == "wcc":
-                # WCC values ARE vertex ids: the fixed point in renamed space
-                # labels components by min *renamed* id.  Canonicalise to the
-                # reference labelling (min original id per component).
-                leaders = values.astype(np.int64)  # renamed leader per vertex
-                uniq, comp_of = np.unique(leaders, return_inverse=True)
-                min_orig = np.full(len(uniq), np.iinfo(np.int64).max)
-                np.minimum.at(min_orig, comp_of, np.arange(g.n))
-                values = min_orig[comp_of].astype(np.float32)
-        return values, iters, pt, stats
+        if sperm is not None:
+            # values are indexed by stride-renamed ids; map back to the
+            # pre-stride ids (WCC labels re-canonicalised to min id)
+            values = undo_relabel(values, sperm, problem.name)
+        return values, iters, pt, stats, extras

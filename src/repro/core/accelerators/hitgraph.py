@@ -43,6 +43,7 @@ from repro.core.trace import (
     seq_read,
     seq_write,
 )
+from repro.graph.layout import partition_balance
 from repro.graph.partition import horizontal_partition, interval_routing
 from repro.graph.problems import Problem
 from repro.graph.structure import Graph
@@ -68,11 +69,17 @@ class HitGraph(Accelerator):
         route, jb = interval_routing(dst, k, interval_size)
         return dict(n_edges=len(idx), src=src, dst=dst, w=w, route=route, jb=jb)
 
-    def _execute(self, g: Graph, problem: Problem, root: int):
+    def _execute(self, g: Graph, problem: Problem, root: int,
+                 init=None):
         cfg = self.config
         p = max(cfg.n_pes, 1)  # PEs == channels
-        parts = horizontal_partition(g, cfg.interval_size, by="src")
+        ivl = cfg.effective_interval
+        parts = horizontal_partition(g, ivl, by="src")
         k = parts.k
+        extras = dict(
+            effective_interval=ivl,
+            balance=partition_balance([len(parts.edge_idx[i]) for i in range(k)]),
+        )
         weighted = bool(g.weighted and problem.needs_weights)
         edge_bytes = 12 if weighted else 8
 
@@ -82,9 +89,9 @@ class HitGraph(Accelerator):
         skip_opt = cfg.has("partition_skipping") and problem.kind == "min"
 
         prep = ARTIFACTS.get_or_build(
-            (g.fingerprint, "hitgraph.prep", cfg.interval_size, sort_opt, weighted),
+            (g.fingerprint, "hitgraph.prep", ivl, sort_opt, weighted),
             lambda: [self._partition_prep(g, parts.edge_idx[i], k,
-                                          cfg.interval_size, sort_opt, weighted)
+                                          ivl, sort_opt, weighted)
                      for i in range(k)],
         )
 
@@ -98,7 +105,7 @@ class HitGraph(Accelerator):
             # update queue for destination partition j (written by all PEs)
             layouts[j % p].alloc(f"upd{j}", max(g.m, 1) * 8)
 
-        values = problem.init_values(g, root)
+        values = problem.init_values(g, root) if init is None else init.copy()
         src_deg = g.degrees_out.astype(np.float32) if problem.name == "pr" else None
         active = np.ones(g.n, dtype=bool)  # bitmap: changed last iteration
         dirty = np.ones(k, dtype=bool)
@@ -241,7 +248,7 @@ class HitGraph(Accelerator):
                 stats.append(st)
                 break  # single iteration
             dirty = np.zeros(k, dtype=bool)
-            ch_parts = np.unique(changed_global.nonzero()[0] // cfg.interval_size)
+            ch_parts = np.unique(changed_global.nonzero()[0] // ivl)
             dirty[ch_parts] = True
             active = changed_global
             values = new_values
@@ -249,4 +256,4 @@ class HitGraph(Accelerator):
             if not any_change:
                 break
 
-        return values, iters, pt, stats
+        return values, iters, pt, stats, extras

@@ -40,6 +40,7 @@ from repro.core.trace import (
     seq_read,
     seq_write,
 )
+from repro.graph.layout import partition_balance
 from repro.graph.partition import vertical_partition
 from repro.graph.problems import Problem
 from repro.graph.structure import Graph
@@ -51,11 +52,18 @@ class ThunderGP(Accelerator):
     supports_weights = True
     supports_multichannel = True
 
-    def _execute(self, g: Graph, problem: Problem, root: int):
+    def _execute(self, g: Graph, problem: Problem, root: int,
+                 init=None):
         cfg = self.config
         p = max(cfg.n_pes, 1)  # channels
-        parts = vertical_partition(g, cfg.interval_size, n_chunks=p)
+        ivl = cfg.effective_interval
+        parts = vertical_partition(g, ivl, n_chunks=p)
         k = parts.k
+        extras = dict(
+            effective_interval=ivl,
+            balance=partition_balance(
+                [sum(len(parts.edge_idx[i][c]) for c in range(p)) for i in range(k)]),
+        )
         weighted = bool(g.weighted and problem.needs_weights)
         edge_bytes = 12 if weighted else 8
 
@@ -72,7 +80,7 @@ class ThunderGP(Accelerator):
             )
 
         prep = ARTIFACTS.get_or_build(
-            (g.fingerprint, "thundergp.prep", cfg.interval_size, p, weighted),
+            (g.fingerprint, "thundergp.prep", ivl, p, weighted),
             lambda: [[chunk_prep(i, c) for c in range(p)] for i in range(k)],
         )
 
@@ -99,7 +107,7 @@ class ThunderGP(Accelerator):
                 lo, hi = parts.interval(i)
                 layouts[ch].alloc(f"upd{i}", (hi - lo) * 4)
 
-        values = problem.init_values(g, root)
+        values = problem.init_values(g, root) if init is None else init.copy()
         src_deg = g.degrees_out.astype(np.float32) if problem.name == "pr" else None
         # ThunderGP's request streams are fully static: every iteration
         # re-reads the same prefetch/edge/source/update regions.  Build each
@@ -201,4 +209,4 @@ class ThunderGP(Accelerator):
             if problem.kind == "min" and not any_change:
                 break
 
-        return values, iters, pt, stats
+        return values, iters, pt, stats, extras

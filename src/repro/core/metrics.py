@@ -44,6 +44,10 @@ class SimReport:
     iterations: int
     per_iteration: list[IterationStats]
     values: np.ndarray | None = None  # final vertex values (for validation)
+    # graph-layout record (repro.graph.layout): reorder, interval_scale,
+    # effective_interval (what the partitioner actually used — ForeGraph may
+    # clamp), balance (edges/partition min/max/cv, shard_fill for ForeGraph)
+    layout: dict | None = None
 
     @property
     def runtime_s(self) -> float:
@@ -78,6 +82,10 @@ class SimReport:
     def values_read_per_iteration(self) -> float:
         return self.values_read_total / max(self.iterations, 1)
 
+    @property
+    def partitions_skipped_total(self) -> int:
+        return sum(s.partitions_skipped for s in self.per_iteration)
+
     def to_dict(self, include_values: bool = False) -> dict:
         """JSON-serialisable dict; round-trips via ``from_dict``.
 
@@ -99,6 +107,7 @@ class SimReport:
                 if include_values and self.values is not None
                 else None
             ),
+            layout=self.layout,
         )
 
     @staticmethod
@@ -115,9 +124,12 @@ class SimReport:
             iterations=d["iterations"],
             per_iteration=[IterationStats.from_dict(s) for s in d["per_iteration"]],
             values=np.asarray(values, dtype=np.float32) if values is not None else None,
+            layout=d.get("layout"),  # absent in pre-layout-layer records
         )
 
     def row(self) -> dict:
+        lay = self.layout or {}
+        balance = lay.get("balance") or {}
         return dict(
             accelerator=self.accelerator,
             graph=self.graph,
@@ -132,4 +144,10 @@ class SimReport:
             row_misses=self.timing.misses,
             row_conflicts=self.timing.conflicts,
             bw_utilization=self.timing.bw_utilization,
+            reorder=lay.get("reorder", "identity"),
+            interval_scale=lay.get("interval_scale", 1),
+            effective_interval=lay.get("effective_interval"),
+            partitions=balance.get("partitions"),
+            edges_per_partition_cv=balance.get("edges_cv"),
+            partitions_skipped=self.partitions_skipped_total,
         )

@@ -571,3 +571,16 @@ def split_round_robin(t, k: int, granularity: int = 1) -> list:
         for i in range(k)
         for pos in (_split_positions(t.n, k, i, granularity),)
     ]
+
+
+def trace_stream_hash(traces) -> str:
+    """sha256 over the materialised request streams (lines + is_write
+    bytes), in order — THE byte-identity fingerprint the golden-hash
+    checks compare (bench_host, bench_partition, tests/test_layout.py all
+    hash through here so they can never drift apart)."""
+    h = hashlib.sha256()
+    for tr in traces:
+        m = materialize(tr)
+        h.update(m.lines.tobytes())
+        h.update(m.is_write.tobytes())
+    return h.hexdigest()

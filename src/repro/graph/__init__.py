@@ -14,6 +14,15 @@ from repro.graph.generators import (
     GraphSpec,
     PAPER_GRAPHS,
 )
+from repro.graph.layout import (
+    GraphLayout,
+    REORDERS,
+    layout_permutation,
+    partition_balance,
+    relabel_graph,
+    reorder_permutation,
+    undo_relabel,
+)
 from repro.graph.partition import (
     horizontal_partition,
     vertical_partition,
@@ -34,6 +43,13 @@ __all__ = [
     "paper_suite",
     "GraphSpec",
     "PAPER_GRAPHS",
+    "GraphLayout",
+    "REORDERS",
+    "layout_permutation",
+    "partition_balance",
+    "relabel_graph",
+    "reorder_permutation",
+    "undo_relabel",
     "horizontal_partition",
     "vertical_partition",
     "interval_shard_partition",

@@ -14,6 +14,14 @@ simulation environment where partitioned binaries are prepared offline.
 Partition indices are cached per process (``repro.core.hostcache``) keyed on
 the graph's content fingerprint and the partitioning parameters, so sweep
 scenarios differing only in accelerator or DRAM axes reuse them.
+
+Every partitioner takes an optional :class:`repro.graph.layout.GraphLayout`
+which is resolved *before* partitioning: the vertex reorder relabels the
+graph (relabeled graphs carry their own fingerprint, so reordered partition
+indices cache independently) and ``interval_scale`` multiplies the interval
+size.  Accelerator models resolve the layout one level up
+(``Accelerator.prepare``) so results can be mapped back to original ids;
+the parameter here serves standalone/partitioning-study callers.
 """
 from __future__ import annotations
 
@@ -23,7 +31,17 @@ import math
 import numpy as np
 
 from repro.core.hostcache import ARTIFACTS
+from repro.graph.layout import GraphLayout
 from repro.graph.structure import Graph
+
+
+def _resolve_layout(g: Graph, interval_size: int,
+                    layout: GraphLayout | None) -> tuple[Graph, int]:
+    """Apply a layout's reorder + interval scaling ahead of partitioning."""
+    if layout is None:
+        return g, interval_size
+    g, _ = layout.apply(g)
+    return g, layout.scaled(interval_size)
 
 
 def num_intervals(n: int, interval_size: int) -> int:
@@ -81,8 +99,10 @@ class HorizontalPartitions:
         return np.cumsum(indptr), other.astype(np.int32)
 
 
-def horizontal_partition(g: Graph, interval_size: int, by: str = "src") -> HorizontalPartitions:
+def horizontal_partition(g: Graph, interval_size: int, by: str = "src",
+                         layout: GraphLayout | None = None) -> HorizontalPartitions:
     assert by in ("src", "dst")
+    g, interval_size = _resolve_layout(g, interval_size, layout)
 
     def build() -> HorizontalPartitions:
         k = num_intervals(g.n, interval_size)
@@ -116,7 +136,10 @@ class VerticalPartitions:
         return self.graph.src[idx], self.graph.dst[idx]
 
 
-def vertical_partition(g: Graph, interval_size: int, n_chunks: int = 1) -> VerticalPartitions:
+def vertical_partition(g: Graph, interval_size: int, n_chunks: int = 1,
+                       layout: GraphLayout | None = None) -> VerticalPartitions:
+    g, interval_size = _resolve_layout(g, interval_size, layout)
+
     def build() -> VerticalPartitions:
         k = num_intervals(g.n, interval_size)
         order, bounds = interval_routing(g.dst, k, interval_size)
@@ -167,8 +190,15 @@ class IntervalShards:
         )
 
 
-def interval_shard_partition(g: Graph, interval_size: int) -> IntervalShards:
-    assert interval_size <= 65536, "ForeGraph compressed edges need 16-bit local ids"
+def interval_shard_partition(g: Graph, interval_size: int,
+                             layout: GraphLayout | None = None) -> IntervalShards:
+    g, interval_size = _resolve_layout(g, interval_size, layout)
+    if interval_size > 65536:
+        # checked after layout scaling: a valid base interval times a valid
+        # scale can still exceed the 16-bit local-id cap
+        raise ValueError(
+            f"ForeGraph compressed edges need 16-bit local ids; interval "
+            f"{interval_size} exceeds 65,536")
 
     def build() -> IntervalShards:
         q = num_intervals(g.n, interval_size)

@@ -9,9 +9,12 @@
 Tab. 7 axis); ``--mappings`` / ``--page-policies`` / ``--pseudo-channels``
 cross in the memory-controller axes (e.g. ``--mappings row,bank_xor
 --page-policies open,closed --pseudo-channels 0,1`` — invalid combinations
-such as pseudo-channels on DDR4 are filtered, not errors); ``--list``
-prints the expanded scenarios (and what was filtered out) without
-simulating anything.
+such as pseudo-channels on DDR4 are filtered, not errors); ``--reorders``
+/ ``--interval-scales`` cross in the graph-layout axes (vertex reordering
+before partitioning and power-of-two partition-granularity scaling —
+combinations a model rejects, e.g. ForeGraph past its 65,536-vertex
+interval cap, are likewise filtered); ``--list`` prints the expanded
+scenarios (and what was filtered out) without simulating anything.
 """
 from __future__ import annotations
 
@@ -50,6 +53,12 @@ def build_spec(args: argparse.Namespace) -> SweepSpec:
         drams = tuple((d, c) for d in drams for c in chans)
     overrides: tuple = (ConfigOverride(engine=args.engine) if args.engine
                         else ConfigOverride(),)
+    try:
+        scales = tuple(int(x) for x in _csv_list(args.interval_scales)) or (1,)
+    except ValueError:
+        raise ValueError(
+            f"bad --interval-scales value in {args.interval_scales!r} "
+            f"(use a comma list of power-of-two integers)")
     return SweepSpec(
         name=args.name,
         accelerators=_csv_list(args.accels),
@@ -60,6 +69,8 @@ def build_spec(args: argparse.Namespace) -> SweepSpec:
         page_policies=_csv_list(args.page_policies) or ("open",),
         pseudo_channels=_csv_bools(args.pseudo_channels, "--pseudo-channels"),
         overrides=overrides,
+        reorders=_csv_list(args.reorders) or ("identity",),
+        interval_scales=scales,
     )
 
 
@@ -84,6 +95,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--pseudo-channels", default="0",
                     help="HBM pseudo-channel axis (comma list of 0/1; "
                          "1 on non-HBM presets is filtered, not an error)")
+    ap.add_argument("--reorders", default="identity",
+                    help="graph-layout vertex reorderings applied before "
+                         "partitioning (identity,degree,random,bfs)")
+    ap.add_argument("--interval-scales", default="1",
+                    help="power-of-two multipliers on each accelerator's "
+                         "interval size (e.g. 1,2,4; combinations a model "
+                         "rejects are filtered, not errors)")
     ap.add_argument("--engine", default="", help="DRAM engine override (scan|fast)")
     ap.add_argument("--workers", type=int, default=0,
                     help="process-pool size; <=1 runs serially")

@@ -45,6 +45,8 @@ def scenario_key(s: Scenario) -> dict:
             engine=s.config.engine,
             max_iters=s.config.max_iters,
             scan_cutoff=s.config.scan_cutoff,
+            reorder=s.config.reorder,
+            interval_scale=s.config.interval_scale,
         ),
     )
 

@@ -37,6 +37,8 @@ def result_rows(
             address_mapping=s.dram.mapping.label,
             page_policy=s.dram.page_policy,
             pseudo_channels=int(s.dram.pseudo_channels),
+            reorder=s.config.reorder,
+            interval_scale=s.config.interval_scale,
             label=s.label,
         )
         if with_status:
@@ -44,6 +46,8 @@ def result_rows(
         rep = r.report
         if rep is not None:
             gs = r.record.get("graph_stats", {})
+            lay = rep.layout or {}
+            balance = lay.get("balance") or {}
             row.update(
                 n=rep.n,
                 m=rep.m,
@@ -60,6 +64,14 @@ def result_rows(
                 bw_utilization=rep.timing.bw_utilization,
                 avg_degree=gs.get("avg_degree"),
                 degree_skewness=gs.get("degree_skewness"),
+                # graph-layout columns (None on records predating the layer)
+                effective_interval=lay.get("effective_interval"),
+                partitions=balance.get("partitions"),
+                edges_per_partition_min=balance.get("edges_min"),
+                edges_per_partition_max=balance.get("edges_max"),
+                edges_per_partition_cv=balance.get("edges_cv"),
+                shard_fill=balance.get("shard_fill"),
+                partitions_skipped=rep.partitions_skipped_total,
             )
         elif include_errors:
             err = (r.record.get("error") or "").strip()

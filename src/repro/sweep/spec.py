@@ -28,6 +28,7 @@ from repro.core.dram import (
     dram_config,
 )
 from repro.graph.generators import PAPER_GRAPHS, GraphSpec
+from repro.graph.layout import REORDERS, validate_interval_scale
 from repro.graph.problems import PROBLEMS
 
 
@@ -67,8 +68,8 @@ class Scenario:
     @property
     def scenario_id(self) -> str:
         """Human-readable identity for progress lines and error reports.
-        Memory-controller axes appear only when non-default, so historical
-        ids are unchanged."""
+        Memory-controller and layout axes appear only when non-default, so
+        historical ids are unchanged."""
         dram = f"{self.dram.name}x{self.dram.channels}"
         if self.dram.pseudo_channels:
             dram += "-pc"
@@ -78,6 +79,10 @@ class Scenario:
             parts.append(m.label)
         if self.dram.page_policy != "open":
             parts.append(self.dram.page_policy)
+        if self.config.reorder != "identity":
+            parts.append(self.config.reorder)
+        if self.config.interval_scale != 1:
+            parts.append(f"ivx{self.config.interval_scale}")
         if self.label:
             parts.append(self.label)
         return "/".join(parts)
@@ -136,10 +141,18 @@ class SweepSpec:
       pseudo_channels: HBM pseudo-channel mode on/off; ``True`` is filtered
         to :class:`Skipped` on non-HBM presets.
       overrides: :class:`ConfigOverride` axis (ablations, interval sizes...).
+      reorders: graph-layout vertex reorderings applied before partitioning
+        (``identity`` | ``degree`` | ``random`` | ``bfs`` —
+        ``repro.graph.layout.REORDERS``); semantics are layout-invariant,
+        only partition shapes and traces move.
+      interval_scales: power-of-two multipliers on each accelerator's
+        ``interval_size`` (partition granularity axis); combinations a
+        model rejects (ForeGraph past the 65,536 cap) are filtered to
+        :class:`Skipped`.
 
     Expansion order is graphs, accelerators, problems, drams, mappings,
-    page policies, pseudo-channels, overrides — stable, so result rows are
-    deterministic regardless of execution order.
+    page policies, pseudo-channels, overrides, reorders, interval scales —
+    stable, so result rows are deterministic regardless of execution order.
     """
 
     name: str
@@ -151,6 +164,8 @@ class SweepSpec:
     page_policies: tuple[str, ...] = ("open",)
     pseudo_channels: tuple[bool, ...] = (False,)
     overrides: tuple[ConfigOverride, ...] = (ConfigOverride(),)
+    reorders: tuple[str, ...] = ("identity",)
+    interval_scales: tuple[int, ...] = (1,)
 
     def _validate(self) -> None:
         """Clean errors for unknown axis names (instead of a KeyError deep
@@ -179,6 +194,9 @@ class SweepSpec:
         bad_pc = [p for p in self.pseudo_channels if not isinstance(p, bool)]
         if bad_pc:
             raise ValueError(f"pseudo_channels must be booleans, got {bad_pc}")
+        check("reorder(s)", self.reorders, REORDERS)
+        for scale in self.interval_scales:
+            validate_interval_scale(scale)
 
     def _memory_axes(self):
         """The resolved (mapping, page_policy, pseudo_channels) cross
@@ -246,28 +264,35 @@ class SweepSpec:
                                 skip(reason)
                                 continue
                             for ov in self.overrides:
-                                cfg = default_config(accel)
+                                base_cfg = default_config(accel)
                                 if channels and cls.supports_multichannel:
-                                    cfg = dataclasses.replace(cfg, n_pes=channels)
-                                cfg = ov.apply(cfg)
-                                try:
-                                    cls(cfg)  # model-side config validation
-                                except ValueError as e:
-                                    skip(str(e), ov.label)
-                                    continue
-                                scenarios.append(Scenario(
-                                    graph=gspec,
-                                    accelerator=accel,
-                                    problem=prob,
-                                    dram=dram_config(
-                                        dname, channels=channels,
-                                        mapping=mapping, page_policy=policy,
-                                        pseudo_channels=pc,
-                                    ),
-                                    config=cfg,
-                                    root=gspec.root,
-                                    label=ov.label,
-                                ))
+                                    base_cfg = dataclasses.replace(
+                                        base_cfg, n_pes=channels)
+                                base_cfg = ov.apply(base_cfg)
+                                for reorder in self.reorders:
+                                    for scale in self.interval_scales:
+                                        try:
+                                            cfg = dataclasses.replace(
+                                                base_cfg, reorder=reorder,
+                                                interval_scale=scale)
+                                            cls(cfg)  # model-side validation
+                                        except ValueError as e:
+                                            skip(str(e), ov.label)
+                                            continue
+                                        scenarios.append(Scenario(
+                                            graph=gspec,
+                                            accelerator=accel,
+                                            problem=prob,
+                                            dram=dram_config(
+                                                dname, channels=channels,
+                                                mapping=mapping,
+                                                page_policy=policy,
+                                                pseudo_channels=pc,
+                                            ),
+                                            config=cfg,
+                                            root=gspec.root,
+                                            label=ov.label,
+                                        ))
         return scenarios, skipped
 
     def scenarios(self) -> list[Scenario]:

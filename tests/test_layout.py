@@ -1,0 +1,449 @@
+"""The pluggable partitioning & graph-layout layer, locked down by a
+differential suite: every accelerator x problem must converge to identical
+final values (after inverse mapping) under every vertex reorder and every
+interval scale, and the identity layout at scale 1 must be byte-identical
+to the PR-4 baseline (golden trace hashes).  Plus: reorder bijections,
+balance metrics, the ForeGraph interval-cap regression, layout-independent
+host-artifact caching, and the sweep axes that expose all of it."""
+import dataclasses
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs.graphsim import LAYOUT_AXES
+from repro.core import hostcache
+from repro.core.accelerators import ACCELERATORS
+from repro.core.accelerators import foregraph as foregraph_mod
+from repro.core.accelerators.base import AccelConfig
+from repro.core.metrics import SimReport
+from repro.core.trace import trace_stream_hash
+from repro.graph.generators import GraphSpec, rmat
+from repro.graph.layout import (
+    REORDERS,
+    GraphLayout,
+    canonical_min_labels,
+    inverse_permutation,
+    partition_balance,
+    relabel_graph,
+    relabel_values,
+    reorder_permutation,
+    undo_relabel,
+)
+from repro.graph.partition import (
+    horizontal_partition,
+    interval_shard_partition,
+    vertical_partition,
+)
+from repro.graph.problems import PROBLEMS, reference_solve
+from repro.graph.structure import from_edges
+from repro.sweep.cache import scenario_hash
+from repro.sweep.results import result_rows
+from repro.sweep.runner import run_sweep
+from repro.sweep.spec import SweepSpec
+
+NON_IDENTITY = tuple(r for r in REORDERS if r != "identity")
+TINY = GraphSpec("tiny", "uniform", 256, 1024, True, 1, 0)
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "..",
+                           "benchmarks", "golden_hashes_tiny.json")
+
+# every valid accelerator x problem pairing (weighted problems only where
+# the model supports weights) — the differential suite's coverage matrix
+VALID_PAIRS = [
+    (a, p) for a in ACCELERATORS for p in PROBLEMS
+    if not (PROBLEMS[p].needs_weights and not ACCELERATORS[a].supports_weights)
+]
+
+
+@pytest.fixture(scope="module")
+def lg():
+    """Layout test graph: skewed, multi-component-free scale keeps every
+    accelerator multi-partition at interval 128 (n=512 -> 4 intervals)."""
+    return rmat(9, edge_factor=8, seed=23, name="layout_rmat")
+
+
+def _cfg(accel: str, **kw) -> AccelConfig:
+    n_pes = 2 if ACCELERATORS[accel].supports_multichannel else 1
+    return AccelConfig(interval_size=128, n_pes=n_pes, **kw)
+
+
+def _prepare(accel, g, prob, root, **kw):
+    return ACCELERATORS[accel](_cfg(accel, **kw)).prepare(
+        g, PROBLEMS[prob], root=root)
+
+
+def _assert_same_values(got, want, prob):
+    if PROBLEMS[prob].kind == "min":
+        # min-propagation fixed points are order-independent bit for bit
+        np.testing.assert_array_equal(got, want)
+    else:
+        # acc problems sum float32 contributions in partition order; a
+        # relabeling changes the summation order, not the result
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+# ---------------- reorder permutations ---------------------------------------
+
+
+@pytest.mark.parametrize("reorder", REORDERS)
+def test_reorder_is_bijection(reorder, lg):
+    perm = reorder_permutation(lg, reorder)
+    np.testing.assert_array_equal(np.sort(perm), np.arange(lg.n))
+
+
+@pytest.mark.parametrize("reorder", REORDERS)
+def test_reorder_covers_isolated_vertices(reorder):
+    g = from_edges(12, np.array([[0, 1], [1, 2], [5, 6]]), name="iso")
+    perm = reorder_permutation(g, reorder)
+    np.testing.assert_array_equal(np.sort(perm), np.arange(12))
+
+
+def test_degree_reorder_sorts_descending(lg):
+    perm = reorder_permutation(lg, "degree")
+    order = np.argsort(perm)  # order[new_id] = old_id
+    deg = lg.degrees_out[order]
+    assert (np.diff(deg) <= 0).all()
+
+
+def test_random_reorder_is_seeded(lg):
+    a = reorder_permutation(lg, "random", seed=0)
+    b = reorder_permutation(lg, "random", seed=0)
+    c = reorder_permutation(lg, "random", seed=1)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_bfs_reorder_is_level_order():
+    # path graph 3-1-0-2-4 rooted at the hub 0: level order 0,1,2,3,4
+    g = from_edges(5, np.array([[0, 1], [0, 2], [1, 3], [2, 4]]),
+                   directed=False, name="path")
+    perm = reorder_permutation(g, "bfs")
+    order = np.argsort(perm)
+    assert order.tolist() == [0, 1, 2, 3, 4]
+
+
+def test_relabel_and_undo_round_trip(lg):
+    perm = reorder_permutation(lg, "random")
+    values = np.arange(lg.n, dtype=np.float32) * 0.5
+    carried = relabel_values(values, perm)
+    assert carried[perm[7]] == values[7]
+    np.testing.assert_array_equal(undo_relabel(carried, perm, "bfs"), values)
+    np.testing.assert_array_equal(
+        inverse_permutation(perm)[perm], np.arange(lg.n))
+
+
+def test_canonical_min_labels():
+    # components {0,2} and {1,3} labelled by arbitrary renamed ids
+    labels = np.array([7, 9, 7, 9], dtype=np.float32)
+    np.testing.assert_array_equal(canonical_min_labels(labels),
+                                  np.array([0, 1, 0, 1], dtype=np.float32))
+
+
+def test_relabeled_graph_preserves_structure(lg):
+    gl, perm = relabel_graph(lg, "degree")
+    assert gl.n == lg.n and gl.m == lg.m
+    # per-edge endpoints map exactly; degree multiset is invariant
+    np.testing.assert_array_equal(gl.src, perm[lg.src].astype(np.int32))
+    np.testing.assert_array_equal(np.sort(gl.degrees_out),
+                                  np.sort(lg.degrees_out))
+    assert gl.fingerprint != lg.fingerprint  # caches split per layout
+
+
+# ---------------- differential suite (the acceptance criterion) --------------
+
+
+@pytest.mark.parametrize("accel,prob", VALID_PAIRS,
+                         ids=[f"{a}-{p}" for a, p in VALID_PAIRS])
+def test_every_reorder_reaches_identical_values(accel, prob, lg):
+    """4 accelerators x 5 problems x 4 reorders: after the inverse mapping,
+    every layout must reproduce the identity layout's final values, which
+    themselves must match the reference fixed point."""
+    root = int(np.argmax(lg.degrees_out))
+    base = _prepare(accel, lg, prob, root)
+    ref, _ = reference_solve(lg, PROBLEMS[prob], root=root)
+    np.testing.assert_allclose(
+        np.nan_to_num(base.values, posinf=1e18),
+        np.nan_to_num(ref, posinf=1e18), rtol=1e-4, atol=1e-7)
+    for reorder in NON_IDENTITY:
+        rep = _prepare(accel, lg, prob, root, reorder=reorder)
+        _assert_same_values(rep.values, base.values, prob)
+        assert rep.layout["reorder"] == reorder
+
+
+@pytest.mark.parametrize("accel", list(ACCELERATORS))
+def test_interval_scale_changes_granularity_not_values(accel, lg):
+    root = int(np.argmax(lg.degrees_out))
+    base = _prepare(accel, lg, "bfs", root)
+    scaled = _prepare(accel, lg, "bfs", root, interval_scale=2)
+    np.testing.assert_array_equal(scaled.values, base.values)
+    assert scaled.layout["effective_interval"] == \
+        2 * base.layout["effective_interval"]
+    assert scaled.layout["balance"]["partitions"] < \
+        base.layout["balance"]["partitions"]
+
+
+@pytest.mark.parametrize("accel", list(ACCELERATORS))
+def test_reorder_and_scale_compose(accel, lg):
+    root = int(np.argmax(lg.degrees_out))
+    base = _prepare(accel, lg, "wcc", root)
+    rep = _prepare(accel, lg, "wcc", root, reorder="degree", interval_scale=2)
+    np.testing.assert_array_equal(rep.values, base.values)
+
+
+def test_identity_scale1_is_byte_identical_to_pr4_golden_hashes():
+    """The acceptance criterion's byte-identity half: with the layout layer
+    in place, default-config request streams must hash to the checked-in
+    PR-4 baseline for all four accelerators on both DRAM presets."""
+    baseline = json.load(open(GOLDEN_PATH))
+    spec = SweepSpec(name="golden", accelerators=tuple(ACCELERATORS),
+                     graphs=(TINY,), problems=("bfs",),
+                     drams=("default", "hbm"))
+    g = TINY.build()
+    for s in spec.scenarios():
+        assert s.config.reorder == "identity" and s.config.interval_scale == 1
+        pending = ACCELERATORS[s.accelerator](s.config).prepare(
+            g, PROBLEMS[s.problem], root=s.root, dram=s.dram)
+        assert trace_stream_hash(pending.traces())[:16] == \
+            baseline[s.scenario_id], s.scenario_id
+
+
+def test_reorder_moves_traces_but_not_traffic_totals(lg):
+    """A reorder changes the request streams (different partition shapes)
+    while reading the same per-iteration edge totals on single-iteration
+    problems."""
+    root = int(np.argmax(lg.degrees_out))
+    base = _prepare("accugraph", lg, "pr", root)
+    re = _prepare("accugraph", lg, "pr", root, reorder="random")
+    assert base.stats[0].edges_read == re.stats[0].edges_read
+    # streams themselves differ (write positions move with the relabeling)
+    assert trace_stream_hash(base.traces()) != trace_stream_hash(re.traces())
+
+
+# ---------------- balance metrics --------------------------------------------
+
+
+def test_partition_balance_metrics():
+    b = partition_balance([4, 0, 8])
+    assert (b["edges_min"], b["edges_max"], b["partitions"]) == (0, 8, 3)
+    assert b["edges_mean"] == 4.0
+    assert b["edges_cv"] == pytest.approx(np.std([4, 0, 8]) / 4.0, abs=1e-4)
+    assert "shard_fill" not in b
+    s = partition_balance([4, 0, 8], total_slots=4)
+    assert s["shard_fill"] == 0.5
+    empty = partition_balance([])
+    assert empty["edges_cv"] == 0.0
+
+
+def test_reports_carry_balance_metrics(lg):
+    root = int(np.argmax(lg.degrees_out))
+    for accel in ACCELERATORS:
+        rep = _prepare(accel, lg, "bfs", root).finalize()
+        lay = rep.layout
+        assert lay["reorder"] == "identity" and lay["interval_scale"] == 1
+        b = lay["balance"]
+        assert b["edges_min"] <= b["edges_mean"] <= b["edges_max"]
+        assert b["edges_cv"] >= 0
+        if accel == "foregraph":
+            assert 0 < b["shard_fill"] <= 1
+        else:
+            assert "shard_fill" not in b
+        # row export flattens the balance metrics
+        row = rep.row()
+        assert row["reorder"] == "identity"
+        assert row["effective_interval"] == lay["effective_interval"]
+
+
+def test_layout_record_is_not_shared_with_the_semantics_cache(lg):
+    """Mutating one report's balance dict must not leak into the cached
+    execution (same invariant as values/stats copies)."""
+    root = int(np.argmax(lg.degrees_out))
+    first = _prepare("accugraph", lg, "bfs", root)
+    first.layout["balance"]["edges_min"] = -1
+    first.layout["effective_interval"] = -1
+    again = _prepare("accugraph", lg, "bfs", root)  # SEMANTICS cache hit
+    assert again.layout["balance"]["edges_min"] != -1
+    assert again.layout["effective_interval"] != -1
+
+
+def test_sim_report_layout_round_trips(lg):
+    root = int(np.argmax(lg.degrees_out))
+    rep = _prepare("accugraph", lg, "bfs", root).finalize()
+    again = SimReport.from_dict(rep.to_dict())
+    assert again.layout == rep.layout
+    # records predating the layout layer deserialise to layout=None
+    d = rep.to_dict()
+    del d["layout"]
+    assert SimReport.from_dict(d).layout is None
+
+
+def test_degree_reorder_concentrates_foregraph_shards(lg):
+    """Degree sort clusters hub vertices into the first intervals, so the
+    shard grid gets sparser (or at least no fuller) than under the
+    generator's id-spread."""
+    root = int(np.argmax(lg.degrees_out))
+    ident = _prepare("foregraph", lg, "bfs", root)
+    deg = _prepare("foregraph", lg, "bfs", root, reorder="degree")
+    assert deg.layout["balance"]["shard_fill"] <= \
+        ident.layout["balance"]["shard_fill"]
+
+
+# ---------------- ForeGraph interval-cap regression (satellite) --------------
+
+
+def test_foregraph_rejects_effective_interval_past_cap():
+    with pytest.raises(ValueError, match="65,536"):
+        ACCELERATORS["foregraph"](
+            AccelConfig(interval_size=4096, interval_scale=32))
+    # at the cap is still fine
+    ACCELERATORS["foregraph"](AccelConfig(interval_size=4096, interval_scale=16))
+
+
+def test_foregraph_clamp_warns_once_and_reports_effective_interval(lg):
+    """The historical `min(interval_size, 65536)` clamp was silent and
+    unreported; a config smuggled past __init__ must now warn (once) and
+    the report must carry the interval actually used."""
+    accel = ACCELERATORS["foregraph"](AccelConfig(interval_size=4096))
+    accel.config = dataclasses.replace(accel.config, interval_scale=32)
+    foregraph_mod._CLAMP_WARNED.clear()
+    hostcache.clear_all()
+    with pytest.warns(UserWarning, match="clamping"):
+        pending = accel.prepare(lg, PROBLEMS["bfs"], root=0)
+    assert pending.layout["effective_interval"] == 65536
+    # warned once per config: a fresh execution of the same config is silent
+    hostcache.clear_all()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        again = accel.prepare(lg, PROBLEMS["bfs"], root=0)
+    assert again.layout["effective_interval"] == 65536
+    np.testing.assert_array_equal(again.values, pending.values)
+
+
+def test_sweep_filters_foregraph_scale_past_cap():
+    spec = SweepSpec(name="cap", accelerators=("foregraph",), graphs=(TINY,),
+                     problems=("bfs",), interval_scales=(1, 32))
+    scenarios, skipped = spec.expand()
+    assert len(scenarios) == 1 and len(skipped) == 1
+    assert "65,536" in skipped[0].reason
+
+
+# ---------------- layout-aware partitioners ----------------------------------
+
+
+def test_partitioners_take_layout(lg):
+    lay = GraphLayout("degree", 2)
+    parts = horizontal_partition(lg, 128, layout=lay)
+    assert parts.interval_size == 256
+    all_idx = np.concatenate([parts.edge_idx[p] for p in range(parts.k)])
+    np.testing.assert_array_equal(np.sort(all_idx), np.arange(lg.m))
+    # the layout path and a manual relabel share one cached artifact
+    gl, _ = relabel_graph(lg, "degree")
+    assert horizontal_partition(gl, 256) is parts
+    vparts = vertical_partition(lg, 128, n_chunks=2, layout=lay)
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate([vparts.edge_idx[p][c]
+                                for p in range(vparts.k) for c in range(2)])),
+        np.arange(lg.m))
+    shards = interval_shard_partition(lg, 128, layout=GraphLayout("bfs", 2))
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate([shards.shard_edge_idx[i][j]
+                                for i in range(shards.q)
+                                for j in range(shards.q)])),
+        np.arange(lg.m))
+
+
+def test_graph_layout_validates():
+    with pytest.raises(ValueError, match="unknown reorder"):
+        GraphLayout("spiral")
+    with pytest.raises(ValueError, match="power-of-two"):
+        GraphLayout("identity", 3)
+    with pytest.raises(ValueError, match="power-of-two"):
+        AccelConfig(interval_scale=0)
+    with pytest.raises(ValueError, match="unknown reorder"):
+        AccelConfig(reorder="spiral")
+
+
+def test_reordered_artifacts_cache_independently(lg):
+    """hostcache keys embed the relabeled graph's own fingerprint: two
+    reorders never share partition indices or semantic executions, while a
+    repeat of the same layout is a pure cache hit."""
+    hostcache.clear_all()
+    root = int(np.argmax(lg.degrees_out))
+    _prepare("accugraph", lg, "bfs", root, reorder="degree")
+    misses = hostcache.SEMANTICS.stats()["misses"]
+    _prepare("accugraph", lg, "bfs", root, reorder="degree")
+    assert hostcache.SEMANTICS.stats()["misses"] == misses
+    assert hostcache.SEMANTICS.stats()["hits"] >= 1
+    _prepare("accugraph", lg, "bfs", root, reorder="bfs")
+    assert hostcache.SEMANTICS.stats()["misses"] == misses + 1
+
+
+# ---------------- sweep axes -------------------------------------------------
+
+
+def test_sweep_expands_layout_axes():
+    spec = SweepSpec(name="lay", accelerators=("accugraph",), graphs=(TINY,),
+                     problems=("bfs",), **LAYOUT_AXES)
+    scenarios, skipped = spec.expand()
+    assert len(scenarios) == 4 * 2 and not skipped
+    ids = {s.scenario_id for s in scenarios}
+    assert "tiny/accugraph/bfs/defaultx1" in ids  # default corner unchanged
+    assert "tiny/accugraph/bfs/defaultx1/degree/ivx2" in ids
+
+
+def test_sweep_rejects_unknown_layout_axis_values():
+    with pytest.raises(ValueError, match="unknown reorder"):
+        SweepSpec(name="x", accelerators=("accugraph",), graphs=(TINY,),
+                  reorders=("spiral",)).expand()
+    with pytest.raises(ValueError, match="power-of-two"):
+        SweepSpec(name="x", accelerators=("accugraph",), graphs=(TINY,),
+                  interval_scales=(3,)).expand()
+
+
+def test_scenario_hash_sensitive_to_layout():
+    base = SweepSpec(name="h", accelerators=("accugraph",), graphs=(TINY,),
+                     problems=("bfs",)).scenarios()[0]
+    re = dataclasses.replace(base, config=dataclasses.replace(
+        base.config, reorder="degree"))
+    sc = dataclasses.replace(base, config=dataclasses.replace(
+        base.config, interval_scale=2))
+    assert len({scenario_hash(s) for s in (base, re, sc)}) == 3
+
+
+def test_result_rows_carry_layout_columns(tmp_path):
+    spec = SweepSpec(name="rows", accelerators=("accugraph", "foregraph"),
+                     graphs=(TINY,), problems=("bfs",),
+                     reorders=("identity", "degree"))
+    result = run_sweep(spec, cache_dir=str(tmp_path / "cache"))
+    rows = result_rows(result)
+    assert {r["reorder"] for r in rows} == {"identity", "degree"}
+    for r in rows:
+        assert r["interval_scale"] == 1
+        assert r["effective_interval"] is not None
+        assert r["edges_per_partition_cv"] is not None
+        if r["accelerator"] == "foregraph":
+            assert r["shard_fill"] is not None
+    # identity and degree rows must describe the same converged problem
+    by_key = {(r["accelerator"], r["reorder"]): r for r in rows}
+    for accel in ("accugraph", "foregraph"):
+        assert by_key[(accel, "identity")]["iterations"] > 0
+    # cached re-run exports identical rows (layout columns included)
+    again = run_sweep(spec, cache_dir=str(tmp_path / "cache"))
+    assert again.all_cached
+    assert result_rows(again) == rows
+
+
+def test_cli_accepts_layout_axes(capsys):
+    from repro.sweep.__main__ import main
+
+    rc = main(["--accels", "accugraph", "--graphs", "sd", "--problems", "bfs",
+               "--reorders", "identity,degree,bfs,random",
+               "--interval-scales", "1,2", "--list"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "8 scenarios, 0 skipped" in out
+    assert "sd/accugraph/bfs/defaultx1/random/ivx2" in out
+    assert main(["--reorders", "spiral", "--list"]) == 2
+    capsys.readouterr()
+    assert main(["--interval-scales", "nope", "--list"]) == 2

@@ -237,6 +237,77 @@ def test_stride_mapping_is_permutation(n, q):
 
 
 # ---------------------------------------------------------------------------
+# graph-layout invariants (vertex reordering + interval scaling)
+# ---------------------------------------------------------------------------
+
+reorders_st = st.sampled_from(["identity", "degree", "random", "bfs"])
+
+
+@given(edges_st, st.integers(0, 40), reorders_st)
+@settings(max_examples=40, deadline=None)
+def test_reorder_is_bijection_on_vertex_range(edges, extra_isolated, reorder):
+    """Every reorder is a bijection on [0, n) — including trailing isolated
+    vertices no edge ever touches."""
+    from repro.graph.layout import reorder_permutation
+
+    n = 100 + extra_isolated
+    g = from_edges(n, np.asarray(edges), dedup=False, name="bij")
+    perm = reorder_permutation(g, reorder)
+    np.testing.assert_array_equal(np.sort(perm), np.arange(n))
+
+
+@given(edges_st, st.integers(1, 150), reorders_st, st.sampled_from([1, 2, 4]))
+@settings(max_examples=30, deadline=None)
+def test_partition_schemes_cover_each_edge_exactly_once(edges, interval,
+                                                        reorder, scale):
+    """All three partition schemes are exact covers for arbitrary graphs,
+    interval sizes and layouts: the multiset of edge indices equals
+    arange(m) — no edge dropped, none duplicated."""
+    from repro.graph.layout import GraphLayout
+
+    g = from_edges(100, np.asarray(edges), dedup=False, name="cover")
+    lay = GraphLayout(reorder, scale)
+    want = np.arange(g.m)
+    h = horizontal_partition(g, interval, layout=lay)
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate([h.edge_idx[p] for p in range(h.k)])), want)
+    v = vertical_partition(g, interval, n_chunks=3, layout=lay)
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate([v.edge_idx[p][c]
+                                for p in range(v.k) for c in range(3)])), want)
+    s = interval_shard_partition(g, interval, layout=lay)
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate([s.shard_edge_idx[i][j]
+                                for i in range(s.q)
+                                for j in range(s.q)])), want)
+
+
+@given(edges_st, reorders_st, st.sampled_from(["bfs", "wcc"]))
+@settings(max_examples=10, deadline=None)
+def test_reordered_accelerator_reaches_reference_fixed_point(edges, reorder,
+                                                             prob):
+    """Layout invariance on arbitrary graphs: a reordered AccuGraph run,
+    mapped back to original ids, still reaches the reference fixed point
+    bit for bit (min problems are order-independent)."""
+    import dataclasses
+
+    from repro.configs.graphsim import default_config
+    from repro.core.accelerators.base import run_accelerator
+    from repro.graph.problems import PROBLEMS, reference_solve
+
+    g = from_edges(100, np.asarray(edges), name="lay")
+    if g.m == 0:
+        return
+    root = int(g.src[0])
+    ref, _ = reference_solve(g, PROBLEMS[prob], root=root)
+    cfg = dataclasses.replace(default_config("accugraph"), interval_size=32,
+                              reorder=reorder, engine="fast")
+    rep = run_accelerator("accugraph", g, PROBLEMS[prob], root=root,
+                          dram="default", config=cfg)
+    np.testing.assert_array_equal(rep.values, ref)
+
+
+# ---------------------------------------------------------------------------
 # accelerator semantics == reference fixed point (random graphs)
 # ---------------------------------------------------------------------------
 

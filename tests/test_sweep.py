@@ -187,6 +187,37 @@ def test_resume_after_interrupt(tmp_path):
     assert statuses == {"accugraph": "cached", "foregraph": "ok", "thundergp": "ok"}
 
 
+def test_interrupted_sweep_resumes_with_identical_csv(tmp_path):
+    """Kill the sweep mid-run (after two scenarios were recorded); the
+    re-run must serve exactly those two from the cache — no re-execution —
+    and its exported CSV must be byte-identical to an uninterrupted run."""
+    spec = tiny_spec(accels=("accugraph", "foregraph", "hitgraph", "thundergp"))
+    ref = run_sweep(spec, cache_dir=str(tmp_path / "ref_cache"))
+    assert ref.n_executed == 4 and ref.n_errors == 0
+    ref_csv = str(tmp_path / "ref.csv")
+    write_csv(ref_csv, result_rows(ref))
+
+    cache_dir = str(tmp_path / "cache")
+    done = 0
+
+    def kill_after_two(msg):
+        nonlocal done
+        if " ok " in msg:
+            done += 1
+            if done == 2:
+                raise KeyboardInterrupt  # the worker dies mid-sweep
+
+    with pytest.raises(KeyboardInterrupt):
+        run_sweep(spec, cache_dir=cache_dir, progress=kill_after_two)
+
+    resumed = run_sweep(spec, cache_dir=cache_dir)
+    assert resumed.n_cached == 2 and resumed.n_executed == 2
+    assert resumed.n_errors == 0
+    res_csv = str(tmp_path / "resumed.csv")
+    write_csv(res_csv, result_rows(resumed))
+    assert open(res_csv, "rb").read() == open(ref_csv, "rb").read()
+
+
 def test_error_isolation_and_errors_not_cached(tmp_path):
     spec = tiny_spec(graphs=(BROKEN, TINY))
     cache_dir = str(tmp_path / "cache")
