@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs.base import get_arch
 from repro.models import Model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.legacy.engine import Request, ServeEngine
 
 
 def main():

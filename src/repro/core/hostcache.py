@@ -39,6 +39,14 @@ class HostCache:
         self.misses = 0
         self.enabled = True
 
+    def set_capacity(self, capacity: int) -> None:
+        """Resize the cache, evicting LRU entries past the new bound."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
     def get_or_build(self, key, build: Callable):
         if not self.enabled:
             return build()
@@ -80,6 +88,17 @@ ARTIFACTS = HostCache(capacity=32)
 SEMANTICS = HostCache(capacity=8)
 
 _ALL = (ARTIFACTS, SEMANTICS)
+
+
+def configure(artifacts_capacity: int | None = None,
+              semantics_capacity: int | None = None) -> None:
+    """Resize the host caches.  Long-lived serve workers (which see many
+    jobs over many graphs) raise these above the single-sweep defaults so
+    warm artifacts survive between jobs."""
+    if artifacts_capacity is not None:
+        ARTIFACTS.set_capacity(artifacts_capacity)
+    if semantics_capacity is not None:
+        SEMANTICS.set_capacity(semantics_capacity)
 
 
 def clear_all() -> None:

@@ -1,6 +1,7 @@
-"""Distribution: mesh axes, parameter/activation/cache sharding rules, and
+"""Distribution: mesh axes, parameter/activation/cache sharding rules,
 collective helpers for the production meshes (single-pod 16x16, multi-pod
-2x16x16)."""
+2x16x16), and the persistent spawn-based worker pool the sweep server
+shards scenario chunks across (:mod:`repro.distributed.workpool`)."""
 from repro.distributed.sharding import (
     batch_axes,
     batch_specs,
@@ -8,5 +9,7 @@ from repro.distributed.sharding import (
     param_specs,
     shardings,
 )
+from repro.distributed.workpool import WorkerPool
 
-__all__ = ["batch_axes", "batch_specs", "cache_specs", "param_specs", "shardings"]
+__all__ = ["WorkerPool", "batch_axes", "batch_specs", "cache_specs",
+           "param_specs", "shardings"]

@@ -1,0 +1,75 @@
+"""Persistent spawn-context worker pool for scenario-chunk execution.
+
+The sweep server shards miss-chunks across a pool of long-lived worker
+processes.  Spawn context is mandatory (JAX does not survive forks), and
+the processes deliberately outlive individual jobs: per-process state —
+``repro.core.hostcache`` artifacts, the graph memo, compiled XLA kernels —
+stays warm between jobs, which is most of the point of a persistent
+service over a one-shot CLI.
+
+:class:`WorkerPool` is a thin veneer over ``ProcessPoolExecutor`` adding
+
+- a warm-up ``initializer`` hook (pre-imports the hot modules and resizes
+  the host caches so long-lived workers keep more artifacts),
+- busy-slot tracking, so the server can export worker utilization,
+- ``shutdown(cancel_pending=True)`` for graceful drain: running chunks
+  finish, queued ones are cancelled.
+
+Anything with the same ``submit``/``shutdown``/``size``/``busy`` surface
+can stand in for it — the scheduler tests inject a gated in-process pool
+to make in-flight-join timing deterministic.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import threading
+from concurrent.futures import Future, ProcessPoolExecutor
+from typing import Callable
+
+
+class WorkerPool:
+    def __init__(self, workers: int, initializer: Callable | None = None,
+                 initargs: tuple = ()):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        ctx = multiprocessing.get_context("spawn")
+        self.size = workers
+        self._pool = ProcessPoolExecutor(
+            max_workers=workers, mp_context=ctx,
+            initializer=initializer, initargs=initargs,
+        )
+        self._lock = threading.Lock()
+        self._busy = 0
+        self._submitted = 0
+
+    def submit(self, fn: Callable, *args) -> Future:
+        with self._lock:
+            self._busy += 1
+            self._submitted += 1
+        fut = self._pool.submit(fn, *args)
+        fut.add_done_callback(self._on_done)
+        return fut
+
+    def _on_done(self, fut: Future) -> None:
+        with self._lock:
+            self._busy -= 1
+
+    @property
+    def busy(self) -> int:
+        """Chunks submitted and not yet finished (running or executor-queued;
+        the scheduler bounds its in-flight submissions to ~the pool size, so
+        this tracks busy workers closely)."""
+        with self._lock:
+            return self._busy
+
+    def utilization(self) -> float:
+        return min(1.0, self.busy / self.size)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(size=self.size, busy=min(self._busy, self.size),
+                        chunks_submitted=self._submitted,
+                        utilization=min(1.0, self._busy / self.size))
+
+    def shutdown(self, wait: bool = True, cancel_pending: bool = False) -> None:
+        self._pool.shutdown(wait=wait, cancel_futures=cancel_pending)

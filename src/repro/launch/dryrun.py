@@ -118,7 +118,7 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
         tokens = shape.global_batch * shape.seq_len
         flops_kind = "train"
     elif shape.kind == "prefill":
-        from repro.serve.serve_step import jit_serve_steps
+        from repro.serve.legacy.serve_step import jit_serve_steps
 
         cache_abs = jax.eval_shape(
             lambda: model.init_cache(shape.global_batch, shape.seq_len)
@@ -131,7 +131,7 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
         tokens = shape.global_batch * shape.seq_len
         flops_kind = "inference"
     else:  # decode
-        from repro.serve.serve_step import jit_serve_steps
+        from repro.serve.legacy.serve_step import jit_serve_steps
 
         cache_abs = jax.eval_shape(
             lambda: model.init_cache(shape.global_batch, shape.seq_len)

@@ -45,7 +45,7 @@ def main() -> None:
         lowered = jit_train_step(model, mesh, tcfg)(specs).lower(
             params_abs, opt_abs, specs)
     elif shape.kind == "prefill":
-        from repro.serve.serve_step import jit_serve_steps
+        from repro.serve.legacy.serve_step import jit_serve_steps
 
         cache_abs = jax.eval_shape(
             lambda: model.init_cache(shape.global_batch, shape.seq_len))
@@ -53,7 +53,7 @@ def main() -> None:
                                         shape.seq_len, batch_abstract=specs)
         lowered = prefill.lower(params_abs, specs, cache_abs)
     else:
-        from repro.serve.serve_step import jit_serve_steps
+        from repro.serve.legacy.serve_step import jit_serve_steps
 
         cache_abs = jax.eval_shape(
             lambda: model.init_cache(shape.global_batch, shape.seq_len))

@@ -1,1 +1,53 @@
-"""Serving: KV/SSM cache management, prefill/decode steps, batched engine."""
+"""Simulation-as-a-service: a persistent sweep server over the runner.
+
+``python -m repro.serve`` starts a local HTTP server that keeps the
+expensive state of ``repro.sweep`` warm between requests — a spawn-worker
+pool whose processes hold host caches and compiled timing kernels, plus
+the shared content-addressed result cache.  Clients submit
+:class:`~repro.sweep.SweepSpec` grids and stream result rows back
+incrementally as JSONL; overlapping grids from concurrent clients dedup
+against both the on-disk cache and each other's in-flight work, so no
+scenario is ever simulated twice.
+
+Layers (each usable on its own):
+
+- :mod:`repro.serve.protocol` — wire format: spec <-> JSON, event framing;
+- :mod:`repro.serve.scheduler` — queue, dedup, in-flight join, dispatch,
+  drain; transport-agnostic (tests drive it directly);
+- :mod:`repro.serve.worker` — what runs inside a pool worker process;
+- :mod:`repro.serve.server` — the HTTP/JSONL front + SIGTERM handling;
+- :mod:`repro.serve.client` — thin stdlib client (``ServeClient``);
+- :mod:`repro.serve.metrics` — counters/histograms behind ``/stats``.
+
+Rows are byte-identical to ``python -m repro.sweep`` output for the same
+spec and cache state: both paths share the runner, the cache keys, and
+:func:`repro.sweep.results.scenario_row`.
+
+The seed's LLM-serving scaffolding (batched KV-cache engine) lives on in
+:mod:`repro.serve.legacy`.
+"""
+from repro.serve.client import JobResult, ServeClient, ServeError
+from repro.serve.protocol import (
+    ProtocolError,
+    dump_event,
+    parse_event,
+    spec_from_wire,
+    spec_to_wire,
+)
+from repro.serve.scheduler import TERMINAL_EVENTS, JobState, SweepScheduler
+from repro.serve.server import SweepServer
+
+__all__ = [
+    "JobResult",
+    "JobState",
+    "ProtocolError",
+    "ServeClient",
+    "ServeError",
+    "SweepScheduler",
+    "SweepServer",
+    "TERMINAL_EVENTS",
+    "dump_event",
+    "parse_event",
+    "spec_from_wire",
+    "spec_to_wire",
+]

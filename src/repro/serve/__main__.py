@@ -1,0 +1,150 @@
+"""CLI for the sweep server and its client.
+
+Server (stays up, drains on SIGTERM):
+
+    PYTHONPATH=src python -m repro.serve \
+        --port 8731 --cache results/sweep_cache --workers 4
+
+Client (same axis flags as ``python -m repro.sweep``):
+
+    PYTHONPATH=src python -m repro.serve --submit --address 127.0.0.1:8731 \
+        --accels accugraph,hitgraph --graphs sd --problems bfs --out results/served
+
+    PYTHONPATH=src python -m repro.serve --stats --address 127.0.0.1:8731
+    PYTHONPATH=src python -m repro.serve --shutdown --address 127.0.0.1:8731
+
+``--port 0`` picks a free port; ``--port-file`` writes the bound
+``host:port`` for whoever spawned the server (the bench harness and CI
+use this for discovery).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.serve.client import ServeClient, ServeError
+from repro.serve.server import SweepServer
+from repro.sweep.__main__ import (
+    add_policy_args,
+    add_spec_args,
+    build_policy,
+    build_spec,
+)
+from repro.sweep.results import write_csv, write_json
+
+
+def _serve(args: argparse.Namespace) -> int:
+    try:
+        policy = build_policy(args)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    server = SweepServer(
+        host=args.host, port=args.port,
+        cache_dir=args.cache or None,
+        workers=args.workers, mode=args.mode, policy=policy,
+        chunk_size=args.chunk_size, trace_hashes=args.trace_hashes,
+        quiet=args.quiet,
+    )
+    server.install_signal_handlers()
+    server.start()
+    if args.port_file:
+        with open(args.port_file, "w") as f:
+            f.write(server.address + "\n")
+    print(f"serving on http://{server.address} "
+          f"(cache={args.cache or '<none>'}, workers={args.workers})",
+          flush=True)
+    server.wait()
+    return 0
+
+
+def _submit(args: argparse.Namespace) -> int:
+    try:
+        spec = build_spec(args)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    client = ServeClient(args.address)
+    try:
+        result = client.run(spec)
+    except (OSError, ServeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    for sk in result.skipped:
+        print(f"skip {sk['graph']}/{sk['accelerator']}/{sk['problem']}"
+              f"/{sk['dram']}: {sk['reason']}")
+    rows = result.rows_with_status()
+    if rows:
+        csv_path = f"{args.out}/{spec.name}.csv"
+        write_csv(csv_path, rows)
+        write_json(f"{args.out}/{spec.name}.json", rows)
+        print(f"wrote {csv_path} ({len(rows)} rows)")
+    else:
+        print("no runnable scenarios (all combinations filtered); nothing written")
+    print(f"{result.job_id}: {result.outcome}; {len(rows)}/{result.total} rows "
+          f"({result.n_cached} cached, {result.n_errors} errors)")
+    if result.outcome != "done":
+        return 3
+    return 1 if result.n_errors else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.serve",
+                                 description=__doc__)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--submit", action="store_true",
+                      help="act as a client: submit a sweep to --address")
+    mode.add_argument("--stats", action="store_true",
+                      help="print the server's /stats snapshot")
+    mode.add_argument("--shutdown", action="store_true",
+                      help="ask the server to drain and exit")
+    ap.add_argument("--address", default="127.0.0.1:8731",
+                    help="server address for client modes")
+    # server knobs
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8731,
+                    help="0 picks a free port (see --port-file)")
+    ap.add_argument("--port-file", default="",
+                    help="write the bound host:port here once listening")
+    ap.add_argument("--cache", default="results/sweep_cache",
+                    help="result cache directory ('' disables caching)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="persistent spawn-worker pool size")
+    ap.add_argument("--mode", default="batch", choices=("scenario", "batch"))
+    ap.add_argument("--chunk-size", type=int, default=4,
+                    help="scenarios per worker dispatch")
+    ap.add_argument("--trace-hashes", action="store_true",
+                    help="attach trace_stream_hash fingerprints to rows "
+                         "(golden-hash verification)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress structured logs on stderr")
+    add_policy_args(ap)
+    # client knobs
+    ap.add_argument("--out", default="results/served",
+                    help="(--submit) output directory")
+    add_spec_args(ap)
+    args = ap.parse_args(argv)
+
+    if args.stats:
+        try:
+            print(json.dumps(ServeClient(args.address).stats(), indent=2))
+        except (OSError, ServeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        return 0
+    if args.shutdown:
+        try:
+            ServeClient(args.address).shutdown()
+        except (OSError, ServeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        print("server draining")
+        return 0
+    if args.submit:
+        return _submit(args)
+    return _serve(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""Legacy LLM-serving scaffolding (continuous-batching ``ServeEngine`` over
+``repro.models`` plus the jitted prefill/decode steps).
+
+This predates the graph-simulation service and is unrelated to it; it is
+kept importable for the dry-run/roofline shape coverage and its tests, but
+``repro.serve`` itself is the sweep server (simulation-as-a-service).
+"""

@@ -1,0 +1,124 @@
+"""Wire format of the sweep server: JSON specs in, JSONL events out.
+
+A submission body is ``{"spec": <wire spec>}``; the response is a stream
+of newline-delimited JSON events::
+
+    {"type": "job", "job_id": ..., "total": N, "skipped": [...]}
+    {"type": "row", "index": i, "status": "ok|cached|error",
+     "row": {...}, "done": k, "total": N}       # one per scenario
+    {"type": "done", "job_id": ..., "cached": c, "ok": o, "errors": e}
+  | {"type": "cancelled", ...} | {"type": "interrupted", "completed": k, ...}
+
+``row`` payloads are exactly :func:`repro.sweep.results.scenario_row`
+dicts, and ``index`` is the scenario's position in the spec's expansion
+order — reassembling rows by index reproduces the CLI export byte for
+byte.  Events may carry auxiliary fields (``trace_hash`` when the server
+runs with golden-hash fingerprinting); those never leak into ``row``.
+
+The wire spec is a plain-JSON rendering of :class:`repro.sweep.SweepSpec`:
+axis lists of strings stay strings, inline :class:`GraphSpec` recipes
+become ``{"graph_spec": {...}}`` dicts, ``(dram, channels)`` pairs become
+two-element lists, address mappings serialize to their ``label`` token
+(``scheme`` / ``scheme@lines``), and config overrides to their field dict.
+``spec_from_wire(spec_to_wire(s))`` expands to hash-identical scenarios —
+the server caches under the same content addresses as the CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core.dram import AddressMapping
+from repro.graph.generators import GraphSpec
+from repro.sweep.spec import ConfigOverride, SweepSpec
+
+
+class ProtocolError(ValueError):
+    """A malformed wire message (bad JSON shape, unknown fields...)."""
+
+
+def spec_to_wire(spec: SweepSpec) -> dict:
+    return dict(
+        name=spec.name,
+        accelerators=list(spec.accelerators),
+        graphs=[g if isinstance(g, str)
+                else dict(graph_spec=dataclasses.asdict(g))
+                for g in spec.graphs],
+        problems=list(spec.problems),
+        drams=[d if isinstance(d, str) else [d[0], d[1]]
+               for d in spec.drams],
+        mappings=[m.label if isinstance(m, AddressMapping) else str(m)
+                  for m in spec.mappings],
+        page_policies=list(spec.page_policies),
+        pseudo_channels=[bool(p) for p in spec.pseudo_channels],
+        overrides=[dataclasses.asdict(o) | dict(
+            optimizations=(sorted(o.optimizations)
+                           if o.optimizations is not None else None))
+            for o in spec.overrides],
+        reorders=list(spec.reorders),
+        interval_scales=list(spec.interval_scales),
+    )
+
+
+def _graph_from_wire(g) -> str | GraphSpec:
+    if isinstance(g, str):
+        return g
+    try:
+        return GraphSpec(**g["graph_spec"])
+    except (TypeError, KeyError) as e:
+        raise ProtocolError(f"bad graph entry {g!r}: {e}")
+
+
+def _override_from_wire(o: dict) -> ConfigOverride:
+    try:
+        kw = dict(o)
+        if kw.get("optimizations") is not None:
+            kw["optimizations"] = frozenset(kw["optimizations"])
+        return ConfigOverride(**kw)
+    except TypeError as e:
+        raise ProtocolError(f"bad override entry {o!r}: {e}")
+
+
+def spec_from_wire(d: dict) -> SweepSpec:
+    if not isinstance(d, dict) or "name" not in d:
+        raise ProtocolError("spec must be an object with at least a 'name'")
+    known = {f.name for f in dataclasses.fields(SweepSpec)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ProtocolError(f"unknown spec field(s): {', '.join(unknown)}")
+    kw: dict = dict(name=d["name"])
+    for axis in ("accelerators", "problems", "page_policies", "reorders",
+                 "mappings"):
+        if axis in d:
+            kw[axis] = tuple(d[axis])
+    if "graphs" in d:
+        kw["graphs"] = tuple(_graph_from_wire(g) for g in d["graphs"])
+    if "drams" in d:
+        kw["drams"] = tuple(x if isinstance(x, str) else (x[0], x[1])
+                            for x in d["drams"])
+    if "pseudo_channels" in d:
+        kw["pseudo_channels"] = tuple(bool(p) for p in d["pseudo_channels"])
+    if "interval_scales" in d:
+        kw["interval_scales"] = tuple(int(x) for x in d["interval_scales"])
+    if "overrides" in d:
+        kw["overrides"] = tuple(_override_from_wire(o) for o in d["overrides"])
+    try:
+        return SweepSpec(accelerators=kw.pop("accelerators", ()),
+                         graphs=kw.pop("graphs", ()), **kw)
+    except TypeError as e:
+        raise ProtocolError(f"bad spec: {e}")
+
+
+def dump_event(event: dict) -> bytes:
+    """One JSONL frame (compact separators keep the stream light)."""
+    return (json.dumps(event, separators=(",", ":")) + "\n").encode()
+
+
+def parse_event(line: bytes | str) -> dict:
+    try:
+        ev = json.loads(line)
+    except json.JSONDecodeError as e:
+        raise ProtocolError(f"bad event line {line!r}: {e}")
+    if not isinstance(ev, dict) or "type" not in ev:
+        raise ProtocolError(f"event must be an object with a 'type': {ev!r}")
+    return ev

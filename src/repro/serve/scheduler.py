@@ -1,0 +1,417 @@
+"""Job scheduler of the sweep server: queue, dedup, in-flight join, drain.
+
+The scheduler owns a table of *unique in-flight scenarios* keyed by their
+content hash (the same :func:`repro.sweep.cache.scenario_hash` address the
+on-disk cache uses).  A submitted :class:`~repro.sweep.SweepSpec` expands
+to scenarios, and each one lands in exactly one of three buckets:
+
+- **cache hit** — the on-disk store already has an ok record: the row is
+  streamed back immediately, nothing executes;
+- **in-flight join** — another job (or an earlier index of the same job)
+  already queued the identical scenario: this job subscribes to the
+  pending entry and receives the row when that one execution finishes —
+  two clients asking overlapping grids collapse onto shared work;
+- **miss** — a new entry joins the run queue, and the dispatcher shards
+  queued entries into chunks across the persistent spawn-worker pool
+  (:mod:`repro.serve.worker` keeps host caches and compiled kernels warm
+  between jobs).
+
+Completion fans out: the record is written to the content-addressed cache
+(errors never are — identical failure isolation to the CLI path) and every
+subscribed job gets its row event.  ``drain()`` is the SIGTERM path: stop
+dispatching, let running chunks finish (their rows are cached and
+delivered), cancel what never started, and mark still-open jobs
+interrupted — a re-submission resumes from the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from collections import Counter, deque
+from concurrent.futures import CancelledError
+from typing import Callable
+
+from repro.distributed.workpool import WorkerPool
+from repro.serve import worker as worker_mod
+from repro.serve.metrics import Metrics
+from repro.sweep.cache import ResultCache
+from repro.sweep.results import scenario_row
+from repro.sweep.runner import ExecutionPolicy, plan_scenarios
+from repro.sweep.spec import Scenario, SweepSpec
+
+TERMINAL_EVENTS = ("done", "cancelled", "interrupted")
+
+
+class JobState:
+    """One submitted sweep: its scenarios, progress, and event stream."""
+
+    def __init__(self, job_id: str, spec: SweepSpec,
+                 scenarios: list[Scenario], hashes: list[str], skipped: list):
+        self.id = job_id
+        self.name = spec.name
+        self.scenarios = scenarios
+        self.hashes = hashes
+        self.skipped = skipped
+        self.total = len(scenarios)
+        self.done = 0
+        self.counts: Counter = Counter()
+        self.cancelled = False
+        self.finished = False
+        self.t_submit = time.time()
+        self.events: queue.Queue = queue.Queue()
+
+    def emit(self, event: dict) -> None:
+        self.events.put(event)
+
+    def status(self) -> dict:
+        return dict(
+            job_id=self.id,
+            name=self.name,
+            total=self.total,
+            done=self.done,
+            counts=dict(self.counts),
+            skipped=len(self.skipped),
+            cancelled=self.cancelled,
+            finished=self.finished,
+            age_s=round(time.time() - self.t_submit, 3),
+        )
+
+
+class _Entry:
+    """One unique pending scenario shared by all jobs that requested it."""
+
+    __slots__ = ("scenario", "status", "subscribers", "t_queued")
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario
+        self.status = "queued"  # queued | running
+        self.subscribers: list[tuple[JobState, int]] = []
+        self.t_queued = time.time()
+
+
+class SweepScheduler:
+    """Single-process scheduler core; thread-safe, transport-agnostic (the
+    HTTP layer and the tests drive it directly)."""
+
+    def __init__(
+        self,
+        cache_dir: str | None,
+        workers: int = 2,
+        mode: str = "batch",
+        policy: ExecutionPolicy | None = None,
+        chunk_size: int = 4,
+        trace_hashes: bool = False,
+        history: int = 256,
+        log: Callable[..., None] | None = None,
+        pool_factory: Callable[[], object] | None = None,
+    ):
+        if mode not in ("scenario", "batch"):
+            raise ValueError(f"unknown mode {mode!r} (use scenario|batch)")
+        self.cache = ResultCache(cache_dir)
+        self.mode = mode
+        self.policy = policy
+        self.chunk_size = max(1, chunk_size)
+        self.trace_hashes = trace_hashes
+        self.history = history
+        self.metrics = Metrics()
+        self.log = log or (lambda event, **kw: None)
+        self.t_start = time.time()
+
+        self.pool = (pool_factory() if pool_factory is not None
+                     else WorkerPool(max(1, workers),
+                                     initializer=worker_mod.init_worker))
+        self._max_inflight = 2 * getattr(self.pool, "size", workers)
+
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._jobs: dict[str, JobState] = {}
+        self._job_order: deque[str] = deque()
+        self._entries: dict[str, _Entry] = {}
+        self._queue: deque[str] = deque()
+        self._inflight = 0
+        self._draining = False
+        self._closed = False
+        self._ids = itertools.count(1)
+
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="sweep-dispatcher", daemon=True)
+        self._dispatcher.start()
+
+    # ---- submission --------------------------------------------------------
+
+    def submit(self, spec: SweepSpec) -> JobState:
+        """Expand, dedup against cache and in-flight work, enqueue misses.
+        Raises ``ValueError`` on a bad spec and ``RuntimeError`` once the
+        scheduler is draining."""
+        t0 = time.time()
+        scenarios, skipped = spec.expand()  # ValueError -> caller's 4xx
+        plan = plan_scenarios(scenarios, self.cache)
+        self.metrics.observe("expand_s", time.time() - t0)
+
+        with self._lock:
+            if self._draining or self._closed:
+                raise RuntimeError("server is draining; not accepting jobs")
+            job = JobState(f"job-{next(self._ids):06d}", spec,
+                           scenarios, plan.hashes, skipped)
+            self._jobs[job.id] = job
+            self._job_order.append(job.id)
+            self._prune_jobs()
+            self.metrics.inc("jobs_submitted")
+            self.metrics.inc("scenarios_submitted", len(scenarios))
+            self.metrics.inc("scenarios_skipped", len(skipped))
+
+            job.emit(dict(
+                type="job", job_id=job.id, name=job.name, total=job.total,
+                skipped=[dataclasses.asdict(sk) for sk in skipped],
+            ))
+            for i, rec in plan.cached:
+                self.metrics.inc("cache_hits")
+                self._deliver(job, i, rec, "cached")
+            scheduled = 0
+            for h, idxs in plan.pending_by_hash.items():
+                entry = self._entries.get(h)
+                if entry is None:
+                    entry = self._entries[h] = _Entry(scenarios[idxs[0]])
+                    self._queue.append(h)
+                    scheduled += 1
+                    self.metrics.inc("scenarios_scheduled")
+                else:
+                    # the identical scenario is already queued or running
+                    # under another job: join it instead of recomputing
+                    self.metrics.inc("inflight_joins")
+                entry.subscribers.extend((job, i) for i in idxs)
+                # duplicates inside one submission collapse here too
+                self.metrics.inc("dedup_joins", len(idxs) - 1)
+            if job.total == 0 or job.done >= job.total:
+                self._finish_job(job)
+            if scheduled:
+                self._wake.notify_all()
+        self.log("job_submitted", job=job.id, name=job.name,
+                 total=job.total, cached=len(plan.cached),
+                 scheduled=scheduled, skipped=len(skipped))
+        return job
+
+    def _prune_jobs(self) -> None:
+        while len(self._job_order) > self.history:
+            jid = self._job_order[0]
+            if not self._jobs[jid].finished:
+                break  # never drop a live job
+            self._job_order.popleft()
+            del self._jobs[jid]
+
+    # ---- delivery (lock held) ----------------------------------------------
+
+    def _deliver(self, job: JobState, index: int, record: dict,
+                 status: str) -> None:
+        if job.cancelled or job.finished:
+            return
+        job.done += 1
+        job.counts[status] += 1
+        row = scenario_row(job.scenarios[index], record)
+        event = dict(type="row", job_id=job.id, index=index, status=status,
+                     row=row, done=job.done, total=job.total)
+        if "trace_hash" in record:
+            event["trace_hash"] = record["trace_hash"]
+        job.emit(event)
+        self.metrics.inc("rows_streamed")
+        self.metrics.observe("row_s", time.time() - job.t_submit)
+        if job.done >= job.total:
+            self._finish_job(job)
+
+    def _finish_job(self, job: JobState) -> None:
+        if job.finished:  # e.g. fully-cached job finished during delivery
+            return
+        job.finished = True
+        self.metrics.inc("jobs_completed")
+        job.emit(dict(type="done", job_id=job.id, total=job.total,
+                      cached=job.counts["cached"], ok=job.counts["ok"],
+                      errors=job.counts["error"]))
+        self.log("job_done", job=job.id, **{k: v for k, v in
+                                            job.counts.items()})
+
+    def _complete_entry(self, h: str, record: dict) -> None:
+        entry = self._entries.pop(h, None)
+        if entry is None:
+            return
+        status = record.get("status", "error")
+        if status == "ok":
+            self.cache.put(h, record)
+            self.metrics.inc("executed_ok")
+        else:
+            self.metrics.inc("executed_error")
+            if record.get("timed_out"):
+                self.metrics.inc("timeouts")
+        self.metrics.inc("retries", max(0, record.get("attempts", 1) - 1))
+        for job, idx in entry.subscribers:
+            self._deliver(job, idx, record, status)
+
+    # ---- dispatch ----------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._wake:
+                while not ((self._queue and self._inflight < self._max_inflight)
+                           or self._draining or self._closed):
+                    self._wake.wait()
+                if self._draining or self._closed:
+                    return
+                chunk_hashes = []
+                while self._queue and len(chunk_hashes) < self.chunk_size:
+                    h = self._queue.popleft()
+                    entry = self._entries.get(h)
+                    if entry is None:  # cancelled while queued
+                        continue
+                    entry.status = "running"
+                    self.metrics.observe("queue_wait_s",
+                                         time.time() - entry.t_queued)
+                    chunk_hashes.append(h)
+                if not chunk_hashes:
+                    continue
+                scenarios = [self._entries[h].scenario for h in chunk_hashes]
+                self._inflight += 1
+            t0 = time.time()
+            self.metrics.inc("chunks_dispatched")
+            try:
+                fut = self.pool.submit(worker_mod.run_chunk, scenarios,
+                                       self.mode, self.policy,
+                                       self.trace_hashes)
+            except Exception as e:  # broken pool must not kill the dispatcher
+                self.log("dispatch_failed", error=repr(e),
+                         chunk=len(chunk_hashes))
+                records = [dict(status="error", wall_s=0.0,
+                                error=f"worker pool rejected chunk: {e!r}")
+                           ] * len(chunk_hashes)
+                with self._wake:
+                    for h, rec in zip(chunk_hashes, records):
+                        self._complete_entry(h, rec)
+                    self._inflight -= 1
+                    self._wake.notify_all()
+                continue
+            fut.add_done_callback(
+                lambda f, hs=chunk_hashes, t=t0: self._chunk_done(hs, t, f))
+
+    def _chunk_done(self, chunk_hashes: list[str], t0: float, fut) -> None:
+        try:
+            out = fut.result()
+            records = out["records"]
+            for cache_name, delta in out["hostcache"].items():
+                for k, v in delta.items():
+                    self.metrics.inc(f"worker_hostcache_{cache_name}_{k}", v)
+            self.metrics.observe("execute_s", time.time() - t0)
+        except CancelledError:
+            records = None  # drain cancelled the chunk before it started
+            self.metrics.inc("chunks_cancelled")
+        except Exception as e:  # worker/pool-level failure
+            records = [dict(status="error",
+                            error=f"worker chunk failed: {e!r}", wall_s=0.0)
+                       ] * len(chunk_hashes)
+            self.log("chunk_failed", error=repr(e), chunk=len(chunk_hashes))
+        with self._wake:
+            if records is None:
+                for h in chunk_hashes:  # back to queued, for accounting only
+                    entry = self._entries.get(h)
+                    if entry is not None:
+                        entry.status = "queued"
+            else:
+                for h, rec in zip(chunk_hashes, records):
+                    self._complete_entry(h, rec)
+            self._inflight -= 1
+            self._wake.notify_all()
+
+    # ---- job control -------------------------------------------------------
+
+    def get_job(self, job_id: str) -> JobState | None:
+        with self._lock:
+            return self._jobs.get(job_id)
+
+    def cancel(self, job_id: str) -> bool:
+        """Cancel a job: it stops receiving rows, and queued scenarios no
+        other job wants are dropped.  Running chunks finish (and their
+        results are still cached for everyone's next submission)."""
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None or job.finished or job.cancelled:
+                return False
+            job.cancelled = True
+            self.metrics.inc("jobs_cancelled")
+            for h in list(self._entries):
+                entry = self._entries[h]
+                entry.subscribers = [(j, i) for j, i in entry.subscribers
+                                     if j is not job]
+                if not entry.subscribers and entry.status == "queued":
+                    del self._entries[h]  # dispatcher skips its stale hash
+                    self.metrics.inc("scenarios_cancelled")
+            job.emit(dict(type="cancelled", job_id=job.id, done=job.done,
+                          total=job.total))
+        self.log("job_cancelled", job=job_id)
+        return True
+
+    # ---- lifecycle ---------------------------------------------------------
+
+    def drain(self, timeout: float | None = 60.0) -> None:
+        """Graceful shutdown: reject new jobs, let running chunks finish
+        (rows delivered and cached), cancel never-started chunks, then mark
+        open jobs interrupted so their streams terminate."""
+        with self._wake:
+            if self._closed:
+                return
+            self._draining = True
+            self._wake.notify_all()
+        self.log("draining")
+        self._dispatcher.join(timeout=10.0)
+        # running chunks finish and deliver through their callbacks;
+        # executor-queued ones are cancelled
+        self.pool.shutdown(wait=True, cancel_pending=True)
+        deadline = time.time() + (timeout or 0.0)
+        with self._wake:
+            while self._inflight > 0 and (timeout is None
+                                          or time.time() < deadline):
+                self._wake.wait(timeout=0.2)
+            for job in self._jobs.values():
+                if not job.finished and not job.cancelled:
+                    self.metrics.inc("jobs_interrupted")
+                    job.finished = True
+                    job.emit(dict(type="interrupted", job_id=job.id,
+                                  completed=job.done, total=job.total))
+            self._closed = True
+        self.log("drained")
+
+    def close(self) -> None:
+        """Hard stop (tests): no drain semantics, just tear down."""
+        with self._wake:
+            self._closed = True
+            self._wake.notify_all()
+        self._dispatcher.join(timeout=5.0)
+        self.pool.shutdown(wait=False, cancel_pending=True)
+
+    # ---- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            queue_depth = len(self._queue)
+            running = sum(e.status == "running"
+                          for e in self._entries.values())
+            active_jobs = sum(not j.finished and not j.cancelled
+                              for j in self._jobs.values())
+            draining = self._draining
+            inflight = self._inflight
+        snap = self.metrics.snapshot()
+        pool_stats = (self.pool.stats() if hasattr(self.pool, "stats")
+                      else {})
+        return dict(
+            uptime_s=round(time.time() - self.t_start, 3),
+            draining=draining,
+            queue=dict(depth=queue_depth, running=running,
+                       inflight_chunks=inflight),
+            jobs=dict(active=active_jobs,
+                      submitted=snap["counters"].get("jobs_submitted", 0),
+                      completed=snap["counters"].get("jobs_completed", 0),
+                      cancelled=snap["counters"].get("jobs_cancelled", 0),
+                      interrupted=snap["counters"].get("jobs_interrupted", 0)),
+            workers=pool_stats,
+            counters=snap["counters"],
+            latency=snap["latency"],
+        )

@@ -1,0 +1,55 @@
+"""What runs inside a sweep-server worker process.
+
+Workers are long-lived (see :class:`repro.distributed.WorkerPool`): the
+first chunk pays module import + XLA compilation, every later chunk reuses
+the process's warm state — the ``hostcache`` artifact/semantics caches,
+the runner's graph memo, and jitted timing kernels.  ``init_worker`` runs
+once per process and resizes the host caches for that lifetime;
+``run_chunk`` executes one scenario chunk and reports the host-cache
+hit/miss delta it produced, so the server can aggregate worker warmth in
+``/stats``.
+"""
+from __future__ import annotations
+
+from repro.sweep.runner import ExecutionPolicy, execute_chunk
+from repro.sweep.spec import Scenario
+
+# Long-lived workers see many jobs over many graphs; hold more offline
+# artifacts than a one-shot sweep worker would.
+ARTIFACTS_CAPACITY = 64
+SEMANTICS_CAPACITY = 16
+
+
+def init_worker(artifacts_capacity: int = ARTIFACTS_CAPACITY,
+                semantics_capacity: int = SEMANTICS_CAPACITY) -> None:
+    """Per-process warm-up: resize host caches, pre-import the hot path so
+    the first job does not pay import latency inside its first chunk."""
+    from repro.core import hostcache
+
+    hostcache.configure(artifacts_capacity=artifacts_capacity,
+                        semantics_capacity=semantics_capacity)
+    import repro.core.accelerators  # noqa: F401  (registers the models)
+    import repro.core.engine  # noqa: F401
+
+
+def run_chunk(
+    scenarios: list[Scenario],
+    mode: str,
+    policy: ExecutionPolicy | None,
+    with_trace_hash: bool,
+) -> dict:
+    """Execute one chunk; returns ``{"records": [...], "hostcache": delta}``
+    where the delta is this chunk's hit/miss contribution (cumulative
+    worker counters would double-count across chunks)."""
+    from repro.core.hostcache import stats_all
+
+    before = stats_all()
+    records = execute_chunk(scenarios, mode=mode, policy=policy,
+                            with_trace_hash=with_trace_hash)
+    after = stats_all()
+    delta = {
+        cache: {k: after[cache][k] - before[cache][k]
+                for k in ("hits", "misses")}
+        for cache in after
+    }
+    return dict(records=records, hostcache=delta)

@@ -17,31 +17,49 @@ is the sweep engine on top of the accelerator models:
 CLI: ``python -m repro.sweep --accels accugraph,hitgraph --graphs sd --problems bfs``
 """
 from repro.sweep.cache import ResultCache, scenario_hash, scenario_key
-from repro.sweep.results import rank, result_rows, spearman, write_csv, write_json
+from repro.sweep.results import (
+    rank,
+    result_rows,
+    scenario_row,
+    spearman,
+    write_csv,
+    write_json,
+)
 from repro.sweep.runner import (
+    ExecutionPolicy,
+    ScenarioPlan,
     ScenarioResult,
     SweepResult,
+    execute_chunk,
     execute_scenario,
+    execute_scenario_policied,
     execute_scenarios_batch,
+    plan_scenarios,
     run_sweep,
 )
 from repro.sweep.spec import ConfigOverride, Scenario, Skipped, SweepSpec
 
 __all__ = [
     "ConfigOverride",
+    "ExecutionPolicy",
     "ResultCache",
     "Scenario",
+    "ScenarioPlan",
     "ScenarioResult",
     "Skipped",
     "SweepResult",
     "SweepSpec",
+    "execute_chunk",
     "execute_scenario",
+    "execute_scenario_policied",
     "execute_scenarios_batch",
+    "plan_scenarios",
     "rank",
     "result_rows",
     "run_sweep",
     "scenario_hash",
     "scenario_key",
+    "scenario_row",
     "spearman",
     "write_csv",
     "write_json",

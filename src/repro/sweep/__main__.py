@@ -25,7 +25,7 @@ from repro.core.accelerators import ACCELERATORS
 from repro.graph.generators import PAPER_GRAPHS
 from repro.graph.problems import PROBLEMS
 from repro.sweep.results import result_rows, write_csv, write_json
-from repro.sweep.runner import run_sweep
+from repro.sweep.runner import ExecutionPolicy, run_sweep
 from repro.sweep.spec import ConfigOverride, SweepSpec
 
 
@@ -74,8 +74,10 @@ def build_spec(args: argparse.Namespace) -> SweepSpec:
     )
 
 
-def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(prog="python -m repro.sweep", description=__doc__)
+def add_spec_args(ap: argparse.ArgumentParser) -> None:
+    """The sweep-axis flags, shared verbatim by ``python -m repro.sweep``
+    and the serve client (``python -m repro.serve --submit``) so a spec
+    means the same thing on both paths."""
     ap.add_argument("--name", default="sweep", help="sweep name (output file stem)")
     ap.add_argument("--accels", default=",".join(ACCELERATORS),
                     help=f"comma list from: {','.join(ACCELERATORS)}")
@@ -103,6 +105,36 @@ def main(argv: list[str] | None = None) -> int:
                          "interval size (e.g. 1,2,4; combinations a model "
                          "rejects are filtered, not errors)")
     ap.add_argument("--engine", default="", help="DRAM engine override (scan|fast)")
+
+
+def add_policy_args(ap: argparse.ArgumentParser) -> None:
+    """Robustness knobs (ExecutionPolicy), shared by the CLI runner and the
+    sweep server."""
+    ap.add_argument("--timeout-per-scenario", type=float, default=None,
+                    metavar="SECONDS",
+                    help="best-effort wall-clock bound per scenario; a "
+                         "timed-out scenario becomes an error row (and "
+                         "retries under --retries)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="re-execute a failed/timed-out scenario up to N "
+                         "more times before recording the error")
+    ap.add_argument("--retry-backoff", type=float, default=0.25,
+                    metavar="SECONDS",
+                    help="sleep before retry k is backoff * 2**k")
+
+
+def build_policy(args: argparse.Namespace) -> ExecutionPolicy | None:
+    if args.timeout_per_scenario is None and not args.retries:
+        return None
+    return ExecutionPolicy(timeout_s=args.timeout_per_scenario,
+                           retries=args.retries,
+                           backoff_s=args.retry_backoff)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sweep", description=__doc__)
+    add_spec_args(ap)
+    add_policy_args(ap)
     ap.add_argument("--workers", type=int, default=0,
                     help="process-pool size; <=1 runs serially")
     ap.add_argument("--mode", default="scenario", choices=("scenario", "batch"),
@@ -118,6 +150,7 @@ def main(argv: list[str] | None = None) -> int:
     try:
         spec = build_spec(args)
         spec.expand()
+        policy = build_policy(args)
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -135,6 +168,7 @@ def main(argv: list[str] | None = None) -> int:
         cache_dir=args.cache or None,
         workers=args.workers,
         mode=args.mode,
+        policy=policy,
         progress=lambda msg: print(msg, flush=True),
     )
     rows = result_rows(result, with_status=True)

@@ -8,8 +8,12 @@ problem and root, and ``ENGINE_VERSION``.  Changing any of these — including
 bumping the engine version after a semantics change — moves the scenario to
 a new address, so stale results are never served.
 
-Records are one JSON file per hash, written atomically (tmp + ``os.replace``)
-so parallel workers and interrupted sweeps cannot leave torn records; a
+Records are one JSON file per hash, written atomically (private tmp file,
+fsync, then ``os.replace``) so parallel workers, concurrent serve jobs and
+interrupted sweeps cannot leave torn records: a reader sees either no file,
+the old complete record or the new complete record, never a mix.  Two
+writers racing on the same key are both writing the same deterministic
+content (the key pins the simulation), so last-rename-wins is safe.  A
 re-run of an interrupted sweep simply re-executes the missing hashes.
 """
 from __future__ import annotations
@@ -75,7 +79,8 @@ class ResultCache:
         try:
             with open(self.path(h)) as f:
                 return json.load(f)
-        except (FileNotFoundError, json.JSONDecodeError):
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+            # any unreadable record is a miss (re-execute), never a crash
             return None
 
     def put(self, h: str, record: dict) -> None:
@@ -87,6 +92,10 @@ class ResultCache:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(record, f)
+                f.flush()
+                # the rename must never expose a partially-flushed record,
+                # even across a crash: data reaches disk before the name
+                os.fsync(f.fileno())
             os.replace(tmp, path)
         except BaseException:
             if os.path.exists(tmp):

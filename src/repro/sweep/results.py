@@ -16,6 +16,72 @@ import numpy as np
 from repro.sweep.runner import SweepResult
 
 
+def scenario_row(scenario, record: dict, status: str | None = None) -> dict | None:
+    """One scenario's flat result row from its execution record — THE row
+    shape of every export surface (CLI CSV/JSON, serve stream), so server
+    rows can never drift from ``python -m repro.sweep`` output.
+
+    ``status`` adds the ok/cached/error column.  Error records become rows
+    with an ``error`` column; a record with neither report nor error yields
+    ``None`` (caller decides whether to keep it)."""
+    from repro.core.metrics import SimReport
+
+    s = scenario
+    row = dict(
+        graph=s.graph.name,
+        accelerator=s.accelerator,
+        problem=s.problem,
+        dram=s.dram.name,
+        channels=s.dram.channels,
+        address_mapping=s.dram.mapping.label,
+        page_policy=s.dram.page_policy,
+        pseudo_channels=int(s.dram.pseudo_channels),
+        reorder=s.config.reorder,
+        interval_scale=s.config.interval_scale,
+        label=s.label,
+    )
+    if status is not None:
+        row["status"] = status
+    rep = (SimReport.from_dict(record["report"])
+           if record.get("status") in ("ok", "cached") or "report" in record
+           else None)
+    if rep is not None:
+        gs = record.get("graph_stats", {})
+        lay = rep.layout or {}
+        balance = lay.get("balance") or {}
+        row.update(
+            n=rep.n,
+            m=rep.m,
+            runtime_s=rep.runtime_s,
+            mteps=rep.mteps,
+            mreps=rep.mreps,
+            iterations=rep.iterations,
+            bytes_per_edge=rep.bytes_per_edge,
+            values_read_per_iteration=rep.values_read_per_iteration,
+            edges_read_per_iteration=rep.edges_read_per_iteration,
+            row_hits=rep.timing.hits,
+            row_misses=rep.timing.misses,
+            row_conflicts=rep.timing.conflicts,
+            bw_utilization=rep.timing.bw_utilization,
+            avg_degree=gs.get("avg_degree"),
+            degree_skewness=gs.get("degree_skewness"),
+            # graph-layout columns (None on records predating the layer)
+            effective_interval=lay.get("effective_interval"),
+            partitions=balance.get("partitions"),
+            edges_per_partition_min=balance.get("edges_min"),
+            edges_per_partition_max=balance.get("edges_max"),
+            edges_per_partition_cv=balance.get("edges_cv"),
+            shard_fill=balance.get("shard_fill"),
+            partitions_skipped=rep.partitions_skipped_total,
+        )
+    elif "error" in record or record.get("status") == "error":
+        err = (record.get("error") or "").strip()
+        row["error"] = err.splitlines()[-1] if err else "unknown error"
+    else:
+        return None
+    return row
+
+
 def result_rows(
     result: SweepResult,
     include_errors: bool = True,
@@ -27,58 +93,12 @@ def result_rows(
     off by default so cached re-runs export identical bytes)."""
     rows = []
     for r in result.results:
-        s = r.scenario
-        row = dict(
-            graph=s.graph.name,
-            accelerator=s.accelerator,
-            problem=s.problem,
-            dram=s.dram.name,
-            channels=s.dram.channels,
-            address_mapping=s.dram.mapping.label,
-            page_policy=s.dram.page_policy,
-            pseudo_channels=int(s.dram.pseudo_channels),
-            reorder=s.config.reorder,
-            interval_scale=s.config.interval_scale,
-            label=s.label,
-        )
-        if with_status:
-            row["status"] = r.status
-        rep = r.report
-        if rep is not None:
-            gs = r.record.get("graph_stats", {})
-            lay = rep.layout or {}
-            balance = lay.get("balance") or {}
-            row.update(
-                n=rep.n,
-                m=rep.m,
-                runtime_s=rep.runtime_s,
-                mteps=rep.mteps,
-                mreps=rep.mreps,
-                iterations=rep.iterations,
-                bytes_per_edge=rep.bytes_per_edge,
-                values_read_per_iteration=rep.values_read_per_iteration,
-                edges_read_per_iteration=rep.edges_read_per_iteration,
-                row_hits=rep.timing.hits,
-                row_misses=rep.timing.misses,
-                row_conflicts=rep.timing.conflicts,
-                bw_utilization=rep.timing.bw_utilization,
-                avg_degree=gs.get("avg_degree"),
-                degree_skewness=gs.get("degree_skewness"),
-                # graph-layout columns (None on records predating the layer)
-                effective_interval=lay.get("effective_interval"),
-                partitions=balance.get("partitions"),
-                edges_per_partition_min=balance.get("edges_min"),
-                edges_per_partition_max=balance.get("edges_max"),
-                edges_per_partition_cv=balance.get("edges_cv"),
-                shard_fill=balance.get("shard_fill"),
-                partitions_skipped=rep.partitions_skipped_total,
-            )
-        elif include_errors:
-            err = (r.record.get("error") or "").strip()
-            row["error"] = err.splitlines()[-1] if err else "unknown error"
-        else:
+        if r.status == "error" and not include_errors:
             continue
-        rows.append(row)
+        row = scenario_row(r.scenario, r.record,
+                           status=r.status if with_status else None)
+        if row is not None:
+            rows.append(row)
     return rows
 
 

@@ -31,6 +31,8 @@ from __future__ import annotations
 
 import dataclasses
 import multiprocessing
+import signal
+import threading
 import time
 import traceback
 from concurrent.futures import ProcessPoolExecutor, as_completed
@@ -88,28 +90,127 @@ def _error_record(t0: float) -> dict:
     )
 
 
-def execute_scenario(scenario: Scenario) -> dict:
+def execute_scenario(scenario: Scenario, with_trace_hash: bool = False) -> dict:
     """Run one scenario to a plain-dict record.  Never raises: failures are
-    isolated into ``{"status": "error"}`` records."""
-    from repro.core.accelerators.base import run_accelerator
+    isolated into ``{"status": "error"}`` records.
+
+    ``with_trace_hash`` adds the golden trace-stream fingerprint
+    (``repro.core.trace.trace_stream_hash``, truncated like the checked-in
+    baselines) to ok records — the serve smoke checks stream identity
+    through it.  It is auxiliary metadata, never part of result rows."""
+    from repro.core.accelerators import ACCELERATORS
 
     t0 = time.time()
     try:
         g = _graph(scenario.graph)
-        rep = run_accelerator(
-            scenario.accelerator,
-            g,
-            PROBLEMS[scenario.problem],
-            root=scenario.root,
-            dram=scenario.dram,
-            config=scenario.config,
-        )
-        return _ok_record(rep, _graph_stats(g), time.time() - t0)
+        accel = ACCELERATORS[scenario.accelerator](scenario.config)
+        pending = accel.prepare(g, PROBLEMS[scenario.problem],
+                                root=scenario.root, dram=scenario.dram)
+        rep = pending.finalize()
+        rec = _ok_record(rep, _graph_stats(g), time.time() - t0)
+        if with_trace_hash:
+            from repro.core.trace import trace_stream_hash
+            rec["trace_hash"] = trace_stream_hash(pending.traces())[:16]
+        return rec
     except Exception:
         return _error_record(t0)
 
 
-def execute_scenarios_batch(scenarios: list[Scenario]) -> list[dict]:
+# ---- robustness policy: per-scenario timeout + bounded retry ---------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """Robustness knobs shared by the CLI runner and the sweep server.
+
+    timeout_s: best-effort per-scenario wall-clock bound (SIGALRM-based, so
+      it needs the executing thread to be the process main thread — true for
+      serial runs and spawn-pool workers; elsewhere it is skipped).  A long
+      C-level call delays delivery until control returns to the interpreter.
+    retries: how many times a failed/timed-out scenario re-executes.
+    backoff_s: sleep before retry ``k`` is ``backoff_s * 2**k``.
+    """
+
+    timeout_s: float | None = None
+    retries: int = 0
+    backoff_s: float = 0.25
+
+    def __post_init__(self):
+        if self.timeout_s is not None and self.timeout_s <= 0:
+            raise ValueError(f"timeout_s must be > 0, got {self.timeout_s}")
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries}")
+        if self.backoff_s < 0:
+            raise ValueError(f"backoff_s must be >= 0, got {self.backoff_s}")
+
+    @property
+    def is_default(self) -> bool:
+        return self.timeout_s is None and self.retries == 0
+
+
+class ScenarioTimeout(BaseException):
+    """Raised by the SIGALRM handler; derives from BaseException so the
+    blanket ``except Exception`` failure isolation inside
+    ``execute_scenario`` cannot swallow it."""
+
+
+def _execute_with_timeout(scenario: Scenario, timeout_s: float | None,
+                          with_trace_hash: bool) -> dict:
+    if (timeout_s is None
+            or threading.current_thread() is not threading.main_thread()):
+        return execute_scenario(scenario, with_trace_hash=with_trace_hash)
+
+    def on_alarm(signum, frame):
+        raise ScenarioTimeout
+
+    t0 = time.time()
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    try:
+        signal.setitimer(signal.ITIMER_REAL, timeout_s)
+        try:
+            return execute_scenario(scenario, with_trace_hash=with_trace_hash)
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0.0)
+    except ScenarioTimeout:
+        return dict(
+            status="error",
+            error=(f"scenario timed out after {timeout_s}s "
+                   f"(--timeout-per-scenario)"),
+            timed_out=True,
+            wall_s=round(time.time() - t0, 3),
+        )
+    finally:
+        signal.signal(signal.SIGALRM, old)
+
+
+def execute_scenario_policied(
+    scenario: Scenario,
+    policy: ExecutionPolicy | None = None,
+    with_trace_hash: bool = False,
+) -> dict:
+    """``execute_scenario`` under an :class:`ExecutionPolicy`: best-effort
+    timeout, then bounded retry with exponential backoff.  The returned
+    record carries ``attempts`` (and ``timed_out`` when the last attempt hit
+    the timeout); like all error records it is never cached."""
+    if policy is None or policy.is_default:
+        rec = execute_scenario(scenario, with_trace_hash=with_trace_hash)
+        if policy is not None:
+            rec["attempts"] = 1
+        return rec
+    rec: dict = {}
+    for attempt in range(policy.retries + 1):
+        if attempt:
+            time.sleep(policy.backoff_s * (2 ** (attempt - 1)))
+        rec = _execute_with_timeout(scenario, policy.timeout_s,
+                                    with_trace_hash)
+        rec["attempts"] = attempt + 1
+        if rec["status"] == "ok":
+            break
+    return rec
+
+
+def execute_scenarios_batch(scenarios: list[Scenario],
+                            with_trace_hash: bool = False) -> list[dict]:
     """Run a chunk of scenarios with cross-scenario batched DRAM timing.
 
     All scenarios' semantic halves (``Accelerator.prepare``) run first;
@@ -126,6 +227,7 @@ def execute_scenarios_batch(scenarios: list[Scenario]) -> list[dict]:
 
     records: list[dict | None] = [None] * len(scenarios)
     prepared: list[tuple | None] = [None] * len(scenarios)
+    hashes: list[str | None] = [None] * len(scenarios)
     for i, s in enumerate(scenarios):
         t0 = time.time()
         try:
@@ -133,6 +235,9 @@ def execute_scenarios_batch(scenarios: list[Scenario]) -> list[dict]:
             accel = ACCELERATORS[s.accelerator](s.config)
             pending = accel.prepare(g, PROBLEMS[s.problem], root=s.root,
                                     dram=s.dram)
+            if with_trace_hash:
+                from repro.core.trace import trace_stream_hash
+                hashes[i] = trace_stream_hash(pending.traces())[:16]
             # only the scalar stats are kept: the chunk must not pin every
             # graph's edge arrays until the last finalize
             prepared[i] = (pending, pending.traces(), _graph_stats(g),
@@ -173,12 +278,87 @@ def execute_scenarios_batch(scenarios: list[Scenario]) -> list[dict]:
             # pass + own finalize (comparable to scenario-mode wall_s)
             wall = prep_wall + sim_share * len(traces) + (time.time() - t_fin)
             records[i] = _ok_record(rep, gstats, wall)
+            if hashes[i] is not None:
+                records[i]["trace_hash"] = hashes[i]
             if timing_fallback is not None:
                 records[i]["timing_fallback"] = timing_fallback
         except Exception:
             records[i] = _error_record(t_fin - prep_wall)
         offset += len(traces)
     return records  # type: ignore[return-value]
+
+
+def execute_chunk(
+    scenarios: list[Scenario],
+    mode: str = "scenario",
+    policy: ExecutionPolicy | None = None,
+    with_trace_hash: bool = False,
+) -> list[dict]:
+    """Execute one worker chunk under a mode + policy — the single entry
+    point the sweep pool and the serve workers share.
+
+    ``mode="batch"`` groups the chunk's DRAM traces into a few batched
+    dispatches; a per-scenario ``timeout_s`` forces per-scenario execution
+    (a shared timing pass has no per-scenario clock), and with plain
+    ``retries`` the batch pass runs once and only its failed scenarios
+    re-execute individually under the policy."""
+    policy = policy or ExecutionPolicy()
+    if mode == "batch" and len(scenarios) > 1 and policy.timeout_s is None:
+        records = execute_scenarios_batch(scenarios,
+                                          with_trace_hash=with_trace_hash)
+        if policy.retries:
+            retry = dataclasses.replace(policy, retries=policy.retries - 1)
+            for i, rec in enumerate(records):
+                if rec["status"] == "error":
+                    time.sleep(policy.backoff_s)
+                    records[i] = execute_scenario_policied(
+                        scenarios[i], retry, with_trace_hash=with_trace_hash)
+                    records[i]["attempts"] += 1
+        return records
+    return [execute_scenario_policied(s, policy,
+                                      with_trace_hash=with_trace_hash)
+            for s in scenarios]
+
+
+# ---- planning: cache partition + exact dedup -------------------------------
+
+
+@dataclasses.dataclass
+class ScenarioPlan:
+    """The schedulable shape of a scenario list against a result cache:
+    which indices are already served (``cached``) and which content hashes
+    still need executing (``pending_by_hash`` — every index sharing a hash
+    rides on one execution).  Both ``run_sweep`` and the serve scheduler
+    plan through here, so in- and out-of-process execution can never
+    disagree on cache keys or dedup."""
+
+    scenarios: list[Scenario]
+    hashes: list[str]
+    cached: list[tuple[int, dict]]
+    pending_by_hash: dict[str, list[int]]
+
+    @property
+    def unique_pending(self) -> list[str]:
+        return list(self.pending_by_hash)
+
+    @property
+    def n_duplicates(self) -> int:
+        """Scenario instances collapsed onto another identical one."""
+        return sum(len(v) - 1 for v in self.pending_by_hash.values())
+
+
+def plan_scenarios(scenarios: list[Scenario],
+                   cache: ResultCache) -> ScenarioPlan:
+    hashes = [scenario_hash(s) for s in scenarios]
+    cached: list[tuple[int, dict]] = []
+    pending_by_hash: dict[str, list[int]] = {}
+    for i, h in enumerate(hashes):
+        rec = cache.get(h)
+        if rec is not None and rec.get("status") == "ok":
+            cached.append((i, rec))
+        else:
+            pending_by_hash.setdefault(h, []).append(i)
+    return ScenarioPlan(scenarios, hashes, cached, pending_by_hash)
 
 
 @dataclasses.dataclass
@@ -251,11 +431,14 @@ def run_sweep(
     workers: int = 0,
     progress: Callable[[str], None] | None = None,
     mode: str = "scenario",
+    policy: ExecutionPolicy | None = None,
 ) -> SweepResult:
     """Execute a sweep spec.  ``workers <= 1`` runs serially in-process;
     ``workers > 1`` fans scenarios out to a spawn-context process pool.
     ``mode="batch"`` groups every chunk's DRAM traces into a few batched
-    device dispatches (identical results, fewer dispatches)."""
+    device dispatches (identical results, fewer dispatches).  ``policy``
+    adds the per-scenario timeout / bounded-retry robustness knobs the
+    serve scheduler uses (:class:`ExecutionPolicy`)."""
     if mode not in ("scenario", "batch"):
         raise ValueError(f"unknown mode {mode!r} (use scenario|batch)")
     say = progress or (lambda msg: None)
@@ -264,16 +447,12 @@ def run_sweep(
         say(f"[{spec.name}] skip {sk.graph}/{sk.accelerator}/{sk.problem}"
             f"/{sk.dram}: {sk.reason}")
     cache = ResultCache(cache_dir)
-    hashes = [scenario_hash(s) for s in scenarios]
+    plan = plan_scenarios(scenarios, cache)
 
     results: list[ScenarioResult | None] = [None] * len(scenarios)
-    pending_by_hash: dict[str, list[int]] = {}
-    for i, (s, h) in enumerate(zip(scenarios, hashes)):
-        rec = cache.get(h)
-        if rec is not None and rec.get("status") == "ok":
-            results[i] = ScenarioResult(s, h, "cached", rec)
-        else:
-            pending_by_hash.setdefault(h, []).append(i)
+    for i, rec in plan.cached:
+        results[i] = ScenarioResult(scenarios[i], plan.hashes[i], "cached", rec)
+    pending_by_hash = plan.pending_by_hash
 
     total = len(scenarios)
     done = total - sum(len(v) for v in pending_by_hash.values())
@@ -299,8 +478,9 @@ def run_sweep(
             ctx = multiprocessing.get_context("spawn")
             with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
                 futures = {
-                    pool.submit(execute_scenarios_batch,
-                                [scenarios[pending_by_hash[h][0]] for h in chunk]):
+                    pool.submit(execute_chunk,
+                                [scenarios[pending_by_hash[h][0]] for h in chunk],
+                                "batch", policy):
                     chunk
                     for chunk in chunks
                 }
@@ -316,8 +496,9 @@ def run_sweep(
                         finish(h, record)
         else:
             for chunk in chunks:
-                records = execute_scenarios_batch(
-                    [scenarios[pending_by_hash[h][0]] for h in chunk])
+                records = execute_chunk(
+                    [scenarios[pending_by_hash[h][0]] for h in chunk],
+                    "batch", policy)
                 for h, record in zip(chunk, records):
                     finish(h, record)
             hc = stats_all()
@@ -329,7 +510,8 @@ def run_sweep(
         ctx = multiprocessing.get_context("spawn")
         with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
             futures = {
-                pool.submit(execute_scenario, scenarios[pending_by_hash[h][0]]): h
+                pool.submit(execute_scenario_policied,
+                            scenarios[pending_by_hash[h][0]], policy): h
                 for h in unique_pending
             }
             for fut in as_completed(futures):
@@ -342,7 +524,8 @@ def run_sweep(
                 finish(h, record)
     else:
         for h in unique_pending:
-            finish(h, execute_scenario(scenarios[pending_by_hash[h][0]]))
+            finish(h, execute_scenario_policied(
+                scenarios[pending_by_hash[h][0]], policy))
 
     out = SweepResult(spec.name, [r for r in results if r is not None], skipped)
     say(f"[{spec.name}] {out.summary()}")

@@ -141,7 +141,7 @@ def test_sharded_decode_matches_single_device():
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs.base import get_arch
         from repro.models import Model
-        from repro.serve.serve_step import jit_serve_steps, make_decode_step
+        from repro.serve.legacy.serve_step import jit_serve_steps, make_decode_step
         from repro.launch.mesh import make_dev_mesh
 
         cfg = get_arch("qwen3_0_6b").reduced()

@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs.base import get_arch
 from repro.models import Model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.legacy.engine import Request, ServeEngine
 
 
 @pytest.fixture(scope="module")
