@@ -1,0 +1,183 @@
+"""Semantic-execution engine bench: numpy host loop vs device-resident path.
+
+The host half of a sweep is dominated by per-iteration graph semantics
+(np.minimum.at / np.add.at scatters over millions of edges).  The semexec
+device engine replaces those with fused JAX dispatches — graph state stays
+device-resident across iterations, only changed-sets and per-partition
+counts come back to the host for trace assembly.  This bench times both
+engines end-to-end (prepare: semantic execution + trace assembly) on a
+paper-scale graph and asserts the contract that makes the device path a
+drop-in:
+
+- request streams byte-identical (trace hash per scenario),
+- iteration counts equal,
+- min-problem values bit-identical, acc values allclose.
+
+    PYTHONPATH=src python -m benchmarks.bench_semexec            # lj chunk
+    PYTHONPATH=src python -m benchmarks.bench_semexec --tiny     # CI smoke
+
+``--tiny`` replays the 8 golden tiny scenarios (4 accelerators x 2 DRAMs x
+bfs) under BOTH engines and asserts every hash equals the checked-in
+``golden_hashes_tiny.json`` fingerprint — the device engine cannot drift
+from the goldens without this failing.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import hostcache
+from repro.core.accelerators import ACCELERATORS
+from repro.core.trace import trace_stream_hash
+from repro.graph.problems import PROBLEMS
+from repro.sweep.runner import _graph
+from repro.sweep.spec import SweepSpec
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_hashes_tiny.json")
+
+
+def _build_spec(args) -> SweepSpec:
+    if args.tiny:
+        from repro.graph.generators import GraphSpec
+
+        return SweepSpec(
+            name="bench-semexec-tiny",
+            accelerators=tuple(ACCELERATORS),
+            graphs=(GraphSpec("tiny", "uniform", 256, 1024, True, 1, 0),),
+            problems=("bfs",),
+            drams=("default", "hbm"),
+        )
+    return SweepSpec(
+        name="bench-semexec",
+        accelerators=tuple(x for x in args.accels.split(",") if x),
+        graphs=tuple(x for x in args.graphs.split(",") if x),
+        problems=tuple(x for x in args.problems.split(",") if x),
+        drams=("default",),
+    )
+
+
+def _prepare_all(scenarios, engine: str):
+    """Run every scenario's host half under ``engine``.  The semantics
+    cache is cleared first so each engine pays its full per-iteration cost;
+    partition/layout artifacts stay warm (identical for both engines).
+    Returns per-scenario prepare times alongside the total."""
+    hostcache.SEMANTICS.clear()
+    pendings, walls = [], []
+    for s in scenarios:
+        g = _graph(s.graph)
+        cfg = dataclasses.replace(s.config, semexec=engine)
+        accel = ACCELERATORS[s.accelerator](cfg)
+        t0 = time.time()
+        pendings.append(accel.prepare(g, PROBLEMS[s.problem], root=s.root,
+                                      dram=s.dram))
+        walls.append(time.time() - t0)
+    hashes = [trace_stream_hash(p.traces()) for p in pendings]
+    return pendings, walls, hashes
+
+
+def _check_equivalence(scenarios, host, dev) -> None:
+    for s, h, d in zip(scenarios, host, dev):
+        assert h.iterations == d.iterations, s.scenario_id
+        assert h.layout["engine"] == "numpy" and d.layout["engine"] == "device"
+        if PROBLEMS[s.problem].kind == "min":
+            np.testing.assert_array_equal(h.values, d.values,
+                                          err_msg=s.scenario_id)
+        else:
+            np.testing.assert_allclose(h.values, d.values, rtol=1e-5,
+                                       atol=1e-6, err_msg=s.scenario_id)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--graphs", default="lj",
+                    help="graph suite keys (default: lj, ~1.07M edges)")
+    ap.add_argument("--accels", default="hitgraph,thundergp")
+    ap.add_argument("--problems", default="bfs,pr")
+    ap.add_argument("--out", default="BENCH_semexec.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: golden tiny scenarios under both engines")
+    args = ap.parse_args(argv)
+
+    spec = _build_spec(args)
+    scenarios = spec.scenarios()
+    unsupported = [s for s in scenarios
+                   if s.problem not in sorted(
+                       __import__("repro.core.semexec",
+                                  fromlist=["SUPPORTED"])
+                       .SUPPORTED.get(s.accelerator, ()))]
+    assert not unsupported, [s.scenario_id for s in unsupported]
+    print(f"[bench_semexec] {spec.name}: {len(scenarios)} scenarios")
+
+    # warm partition artifacts + device JIT buckets, then measure; each
+    # engine gets its own warm-up pass (different compiled programs)
+    print("  numpy engine (host scatter loops) ...")
+    _prepare_all(scenarios, "numpy")
+    host_p, host_walls, host_hashes = _prepare_all(scenarios, "numpy")
+    print(f"    prepare {sum(host_walls):.3f}s")
+
+    print("  device engine (fused JAX dispatches) ...")
+    _prepare_all(scenarios, "device")
+    dev_p, dev_walls, dev_hashes = _prepare_all(scenarios, "device")
+    print(f"    prepare {sum(dev_walls):.3f}s")
+
+    assert host_hashes == dev_hashes, "device traces diverged from numpy"
+    _check_equivalence(scenarios, host_p, dev_p)
+    print(f"  equivalence: {len(scenarios)}/{len(scenarios)} trace hashes, "
+          f"values and iteration counts agree")
+
+    per_scenario = {}
+    for s, hw, dw in zip(scenarios, host_walls, dev_walls):
+        sp = round(hw / max(dw, 1e-9), 2)
+        per_scenario[s.scenario_id] = dict(
+            numpy_s=round(hw, 4), device_s=round(dw, 4), speedup=sp)
+        print(f"    {s.scenario_id}: numpy {hw * 1e3:.1f}ms  "
+              f"device {dw * 1e3:.1f}ms  ({sp}x)")
+    best_id = max(per_scenario, key=lambda k: per_scenario[k]["speedup"])
+    speedup = per_scenario[best_id]["speedup"]
+    aggregate = round(sum(host_walls) / max(sum(dev_walls), 1e-9), 2)
+    result = dict(
+        workload=dict(
+            name=spec.name, scenarios=len(scenarios),
+            graphs=sorted({s.graph.name for s in scenarios}),
+            edges={s.graph.name: s.graph.target_m for s in scenarios},
+        ),
+        numpy_prepare_s=round(sum(host_walls), 4),
+        device_prepare_s=round(sum(dev_walls), 4),
+        speedup=speedup,
+        speedup_scenario=best_id,
+        aggregate_speedup=aggregate,
+        per_scenario=per_scenario,
+        traces_identical=True,
+        values_identical=True,
+        golden_trace_hashes={
+            s.scenario_id: h[:16] for s, h in zip(scenarios, host_hashes)
+        },
+    )
+
+    if args.tiny:
+        with open(GOLDEN) as f:
+            golden = json.load(f)
+        mismatches = {
+            s.scenario_id: (h[:16], golden.get(s.scenario_id))
+            for s, h in zip(scenarios, host_hashes)
+            if golden.get(s.scenario_id) != h[:16]
+        }
+        assert not mismatches, f"golden hash drift: {mismatches}"
+        result["golden_match"] = f"{len(scenarios)}/{len(scenarios)}"
+        print(f"  golden: {len(scenarios)}/{len(scenarios)} hashes match "
+              f"{os.path.basename(GOLDEN)}")
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"  wrote {args.out} (best scenario {best_id}: {speedup}x, "
+          f"aggregate {aggregate}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,8 +27,10 @@ source-interval values changed since it was last processed.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import semexec
 from repro.core.accelerators.base import (
     Accelerator,
     INF,
@@ -67,7 +69,7 @@ class AccuGraph(Accelerator):
         return g.src[idx], dst, ud, inv
 
     def _execute(self, g: Graph, problem: Problem, root: int,
-                 init=None):
+                 init=None, engine="numpy"):
         cfg = self.config
         ivl = cfg.effective_interval
         parts = horizontal_partition(g, ivl, by="src")
@@ -100,6 +102,10 @@ class AccuGraph(Accelerator):
         onchip_partition = -1  # which interval currently resides in BRAM
         skip_part = cfg.has("partition_skipping") and problem.kind == "min"
         skip_pref = cfg.has("prefetch_skipping")
+        device = engine == "device"
+        if device:
+            dev = semexec.AccuGraphDevice(g, problem, part_edges, k, ivl)
+            values_dev = jnp.asarray(values)
         iters = 0
 
         if problem.kind == "acc":
@@ -111,8 +117,12 @@ class AccuGraph(Accelerator):
             iter_trace: list[Trace] = []
             any_change = False
             if problem.kind == "acc":
-                snapshot = values.copy()
-                values = np.full(g.n, base_const, dtype=np.float32)
+                if device:
+                    snapshot_dev = values_dev
+                    values_dev = jnp.full(g.n, base_const, dtype=jnp.float32)
+                else:
+                    snapshot = values.copy()
+                    values = np.full(g.n, base_const, dtype=np.float32)
 
             for p in range(k):
                 if skip_part and not dirty[p]:
@@ -124,9 +134,23 @@ class AccuGraph(Accelerator):
 
                 # --- semantics (accumulation over the partition's unique
                 # destinations only; equivalent to the full-|V| scatter) ---
-                src_vals = (snapshot if problem.kind == "acc" else values)[src]
-                if problem.kind == "min":
-                    cand = problem.edge_candidates_np(src_vals)
+                # Gauss-Seidel needs a host sync per partition either way:
+                # the next partition's skip decision reads ``dirty`` bits
+                # this partition may set.  The device path still wins by
+                # replacing the np.minimum.at scatter with one fused
+                # segment dispatch and keeping values device-resident.
+                if device:
+                    if problem.kind == "min":
+                        values_dev, ch_mask = dev.min_step(values_dev, p)
+                        wchanged = dev.ud_host(p)[ch_mask]
+                        if len(wchanged):
+                            any_change = True
+                            dirty[np.unique(wchanged // ivl)] = True
+                    else:
+                        values_dev = dev.acc_step(values_dev, snapshot_dev, p)
+                        wchanged = dev.ud_host(p)
+                elif problem.kind == "min":
+                    cand = problem.edge_candidates_np(values[src])
                     acc = np.full(len(ud), INF, dtype=np.float32)
                     np.minimum.at(acc, inv, cand)
                     old = values[ud]
@@ -138,7 +162,7 @@ class AccuGraph(Accelerator):
                         dirty[np.unique(wchanged // ivl)] = True
                 else:
                     cand = problem.edge_candidates_np(
-                        src_vals, None,
+                        snapshot[src], None,
                         src_deg[src] if src_deg is not None else None,
                     )
                     acc = np.zeros(len(ud), dtype=np.float32)
@@ -175,4 +199,6 @@ class AccuGraph(Accelerator):
             if problem.kind == "min" and (not any_change or (skip_part and not dirty.any())):
                 break
 
+        if device:
+            values = np.asarray(values_dev)
         return values, iters, pt, stats, extras

@@ -26,6 +26,7 @@ from repro.core.engine import (
     simulate_batch,
     simulate_sequential,
 )
+from repro.core import semexec
 from repro.core.hostcache import ARTIFACTS, SEMANTICS
 from repro.core.metrics import IterationStats, SimReport
 from repro.core.trace import Trace, split_round_robin
@@ -57,6 +58,10 @@ class AccelConfig:
     interval_scale: power-of-two multiplier on ``interval_size`` (the
       partition-granularity sweep axis; ``effective_interval`` is the
       product the partitioners actually see).
+    semexec: semantic execution engine ("numpy" | "device") — where the
+      per-iteration graph semantics run (repro.core.semexec).  "device"
+      falls back to numpy (with a warning) for combos without a device
+      formulation; the resolved engine is recorded in the run layout.
     """
 
     interval_size: int = 16384
@@ -67,10 +72,12 @@ class AccelConfig:
     scan_cutoff: int = SCAN_CUTOFF
     reorder: str = "identity"
     interval_scale: int = 1
+    semexec: str = "numpy"
 
     def __post_init__(self):
         validate_reorder(self.reorder)
         validate_interval_scale(self.interval_scale)
+        semexec.validate_engine(self.semexec)
 
     @property
     def effective_interval(self) -> int:
@@ -84,13 +91,18 @@ class AccelConfig:
     # every OTHER field (including ones added later) splits the semantic
     # cache, so a new semantics-relevant knob can never alias stale entries.
     _TIMING_ONLY_FIELDS = ("engine", "scan_cutoff")
+    # Fields resolved per (accelerator, problem) before execution; prepare
+    # appends the RESOLVED value to the semantic cache key instead, so a
+    # requested "device" that falls back to numpy shares the numpy entry.
+    _RESOLVED_FIELDS = ("semexec",)
 
     def semantic_key(self) -> tuple:
         """The config fields that determine a semantic execution (values,
-        iterations, traces) — everything except the DRAM timing knobs."""
+        iterations, traces) — everything except the DRAM timing knobs and
+        the per-problem resolved fields (appended post-resolution)."""
         key = []
         for f in dataclasses.fields(self):
-            if f.name in self._TIMING_ONLY_FIELDS:
+            if f.name in self._TIMING_ONLY_FIELDS + self._RESOLVED_FIELDS:
                 continue
             v = getattr(self, f.name)
             key.append(tuple(sorted(v)) if isinstance(v, frozenset) else v)
@@ -265,12 +277,14 @@ class Accelerator(abc.ABC):
     @abc.abstractmethod
     def _execute(
         self, g: Graph, problem: Problem, root: int,
-        init: np.ndarray | None = None,
+        init: np.ndarray | None = None, engine: str = "numpy",
     ) -> tuple[np.ndarray, int, PhasedTrace, list[IterationStats], dict]:
         """``init`` overrides ``problem.init_values`` — the layout layer
         passes the original-space initial values carried through the vertex
         relabeling, so per-vertex payloads (SpMV's x vector, WCC's id
-        labels) follow their vertices instead of their slots."""
+        labels) follow their vertices instead of their slots.  ``engine``
+        is the RESOLVED semantic engine ("numpy" | "device") — callers go
+        through ``prepare``, which resolves ``config.semexec``."""
         ...
 
     def prepare(
@@ -310,6 +324,8 @@ class Accelerator(abc.ABC):
         if self.config.reorder != "identity":
             gx, perm = relabel_graph(gp, self.config.reorder)
             root_x = int(perm[root])
+        engine = semexec.resolve_engine(self.name, problem.name,
+                                        self.config.semexec)
 
         def execute():
             # per-vertex initial payloads (SpMV's x, WCC's labels) must
@@ -318,11 +334,11 @@ class Accelerator(abc.ABC):
             init = None
             if perm is not None:
                 init = relabel_values(problem.init_values(gp, root), perm)
-            return self._execute(gx, problem, root_x, init)
+            return self._execute(gx, problem, root_x, init, engine)
 
         values, iters, pt, stats, extras = SEMANTICS.get_or_build(
             (gx.fingerprint, self.name, problem.name, root_x,
-             self.config.semantic_key()),
+             self.config.semantic_key(), engine),
             execute,
         )
         # hand out copies of the mutable pieces: a caller mutating
@@ -336,6 +352,7 @@ class Accelerator(abc.ABC):
             values = values.copy()
         layout = dict(reorder=self.config.reorder,
                       interval_scale=self.config.interval_scale,
+                      engine=engine,
                       **{k: dict(v) if isinstance(v, dict) else v
                          for k, v in extras.items()})
         # pseudo-channel mode resolves here, so PendingRun.traces() and

@@ -22,8 +22,10 @@ as in the paper.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import semexec
 from repro.core.accelerators.base import (
     Accelerator,
     INF,
@@ -53,7 +55,7 @@ class ThunderGP(Accelerator):
     supports_multichannel = True
 
     def _execute(self, g: Graph, problem: Problem, root: int,
-                 init=None):
+                 init=None, engine="numpy"):
         cfg = self.config
         p = max(cfg.n_pes, 1)  # channels
         ivl = cfg.effective_interval
@@ -136,13 +138,27 @@ class ThunderGP(Accelerator):
             apply_static.append(ap_row)
         pt = PhasedTrace()
         stats: list[IterationStats] = []
+        device = engine == "device"
+        if device:
+            dev = semexec.ThunderGPDevice(g, problem, prep, k, p, ivl,
+                                          weighted)
+            values_dev = jnp.asarray(values)
         iters = 0
 
         for _ in range(cfg.max_iters):
             iters += 1
             st = IterationStats(partitions_total=k)
             any_change = False
-            if problem.kind == "acc":
+            if device:
+                # ThunderGP's iteration is synchronous (Jacobi) with
+                # disjoint destination intervals, so the whole iteration —
+                # every partition's chunk partials plus the apply combine —
+                # fuses into ONE device dispatch before the trace loop.
+                if problem.kind == "min":
+                    values_dev, any_change = dev.min_step(values_dev)
+                else:
+                    values_dev = dev.acc_step(values_dev)
+            elif problem.kind == "acc":
                 base_const = (1.0 - 0.85) / g.n if problem.name == "pr" else 0.0
                 new_values = np.full(g.n, base_const, dtype=np.float32)
             else:
@@ -157,20 +173,22 @@ class ThunderGP(Accelerator):
                 for c in range(p):
                     pc = prep[i][c]
                     ch = chunk_of[i][c]
-                    src, dst, w = pc["src"], pc["dst"], pc["w"]
 
-                    # semantics: chunk partial accumulation over dst interval
-                    cand = problem.edge_candidates_np(
-                        values[src], w,
-                        src_deg[src] if src_deg is not None else None,
-                    )
-                    if problem.kind == "min":
-                        acc = np.full(ni, INF, dtype=np.float32)
-                        np.minimum.at(acc, dst - lo, cand)
-                    else:
-                        acc = np.zeros(ni, dtype=np.float32)
-                        np.add.at(acc, dst - lo, cand)
-                    partials.append(acc)
+                    if not device:
+                        # semantics: chunk partial accumulation over dst
+                        # interval
+                        src, dst, w = pc["src"], pc["dst"], pc["w"]
+                        cand = problem.edge_candidates_np(
+                            values[src], w,
+                            src_deg[src] if src_deg is not None else None,
+                        )
+                        if problem.kind == "min":
+                            acc = np.full(ni, INF, dtype=np.float32)
+                            np.minimum.at(acc, dst - lo, cand)
+                        else:
+                            acc = np.zeros(ni, dtype=np.float32)
+                            np.add.at(acc, dst - lo, cand)
+                        partials.append(acc)
 
                     # trace: prefetch dst values; edges; semi-sequential
                     # source value loads (sorted by src, duplicates filtered
@@ -183,17 +201,18 @@ class ThunderGP(Accelerator):
                 pt.add_phase(sg_phase)
 
                 # ---- apply (combine chunk partials, write to all copies) ----
-                if problem.kind == "min":
-                    comb = np.minimum.reduce(partials) if partials else np.full(ni, INF)
-                    nv = np.minimum(new_values[lo:hi], comb)
-                    changed = nv < new_values[lo:hi]
-                    new_values[lo:hi] = nv
-                    if changed.any():
-                        any_change = True
-                else:
-                    comb = np.sum(partials, axis=0)
-                    scale = 0.85 if problem.name == "pr" else 1.0
-                    new_values[lo:hi] += np.float32(scale) * comb
+                if not device:
+                    if problem.kind == "min":
+                        comb = np.minimum.reduce(partials) if partials else np.full(ni, INF)
+                        nv = np.minimum(new_values[lo:hi], comb)
+                        changed = nv < new_values[lo:hi]
+                        new_values[lo:hi] = nv
+                        if changed.any():
+                            any_change = True
+                    else:
+                        comb = np.sum(partials, axis=0)
+                        scale = 0.85 if problem.name == "pr" else 1.0
+                        new_values[lo:hi] += np.float32(scale) * comb
 
                 apply_phase: list[Trace] = []
                 for c in range(p):
@@ -202,11 +221,14 @@ class ThunderGP(Accelerator):
                     apply_phase.append(apply_static[i][c])
                 pt.add_phase(apply_phase)
 
-            values = new_values
+            if not device:
+                values = new_values
             stats.append(st)
             if problem.single_iteration:
                 break
             if problem.kind == "min" and not any_change:
                 break
 
+        if device:
+            values = np.asarray(values_dev)
         return values, iters, pt, stats, extras

@@ -65,7 +65,11 @@ from repro.core.trace import Trace, split_round_robin
 # v3: proportional_interleave breaks virtual-time ties by exact lexsort
 # instead of an i*1e-12 float epsilon — merge order changes for streams
 # whose position gaps fall below the epsilon (length products > ~5e11).
-ENGINE_VERSION = "3"
+# v4: semantic-engine axis (AccelConfig.semexec, numpy | device) joins the
+# cache key; device-resident execution is byte-identical on traces but acc
+# problems (pr/spmv) reduce in a different association order, so values can
+# differ within float tolerance — results move to new addresses.
+ENGINE_VERSION = "4"
 
 # Default request-count threshold of the "auto" engine policy: traces up to
 # this many requests use the exact scan engine, longer ones the analytic

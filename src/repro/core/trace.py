@@ -40,8 +40,11 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import hashlib
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dram import decode_lines
@@ -571,6 +574,75 @@ def split_round_robin(t, k: int, granularity: int = 1) -> list:
         for i in range(k)
         for pos in (_split_positions(t.n, k, i, granularity),)
     ]
+
+
+# ---------------------------------------------------------------------------
+# device-side decode (the semexec boundary's trace half)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("lpr", "nb", "scheme"))
+def _decode_lines_jnp(lines, mask, *, lpr, nb, scheme):
+    if scheme == "row":
+        bank = (lines // lpr) % nb
+        row = lines // (lpr * nb)
+    elif scheme == "bank":
+        bank = lines % nb
+        row = lines // (nb * lpr)
+    else:  # bank_xor (pow2 nb validated host-side)
+        row = lines // (lpr * nb)
+        bank = ((lines // lpr) ^ row) % nb
+    bank = jnp.where(mask, bank.astype(jnp.int32), jnp.int32(-1))
+    row = jnp.where(mask, row.astype(jnp.int32), jnp.int32(0))
+    return bank, row
+
+
+def decode_lines_device(lines, mask, cfg):
+    """jnp twin of :func:`repro.core.dram.decode_lines`: line -> (bank,
+    row) under ``cfg.mapping``, as one jitted device dispatch over any
+    array shape.  ``mask`` marks real requests; padding decodes to the
+    engines' no-op convention (bank -1, row 0).  Byte-identical to the
+    numpy decode (integer arithmetic; property-tested)."""
+    nb = cfg.nbanks
+    if cfg.mapping.scheme == "bank_xor" and nb & (nb - 1):
+        raise ValueError(
+            f"bank_xor mapping requires a power-of-two bank count, "
+            f"got {nb} ({cfg.name})")
+    return _decode_lines_jnp(lines, mask, lpr=cfg.lines_per_row, nb=nb,
+                             scheme=cfg.mapping.scheme)
+
+
+def emit_bank_row_device(traces, cfg, min_len: int = 256):
+    """Pack many traces into padded device-resident ``[B, L]`` bank/row
+    buffers with the address decode fused into ONE device dispatch.
+
+    This is the device half of the trace boundary: line streams are
+    gathered host-side (the lazy IR computes merge orders from eager
+    lengths, so line emission stays a host pass), but the per-request
+    decode arithmetic — the O(total requests) part — runs on the device
+    and the result stays there for the batched timing engines, which
+    consume exactly this layout.  Bit-identical to
+    ``engine.TraceBatch.from_traces`` (tests/test_semexec.py).
+
+    Returns ``(bank, row, lengths)`` with jnp ``[B, L]`` int32 buffers
+    (bank padded with -1, the engines' no-op) and host int64 lengths."""
+    lengths = np.array([t.n for t in traces], dtype=np.int64)
+    longest = int(lengths.max()) if len(traces) else 0
+    L = min_len
+    while L < longest:
+        L *= 2
+    B = max(len(traces), 1)
+    lines = np.zeros((B, L), dtype=np.int64)
+    mask = np.zeros((B, L), dtype=bool)
+    for i, t in enumerate(traces):
+        if not t.n:
+            continue
+        lt = _as_lazy(t)
+        lt.emit_lines(lines[i, : t.n])
+        mask[i, : t.n] = True
+    bank, row = decode_lines_device(jnp.asarray(lines), jnp.asarray(mask),
+                                    cfg)
+    return bank, row, lengths
 
 
 def trace_stream_hash(traces) -> str:

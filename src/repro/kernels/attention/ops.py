@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._platform import on_tpu
 from repro.kernels.attention.attention import flash_attention_pallas
 
 LANE = 128
@@ -25,9 +26,11 @@ def flash_attention(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Returns (B, S, nq * hd) attention output (pre-WO)."""
+    if interpret is None:  # compiled on TPU, interpreter elsewhere
+        interpret = not on_tpu()
     b, s, nq, hd = q.shape
     nkv = k.shape[2]
     group = nq // nkv

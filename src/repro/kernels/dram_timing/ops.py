@@ -7,9 +7,9 @@ engine path in ``repro.core.engine.simulate_batch``.
 from __future__ import annotations
 
 import numpy as np
-import jax
 
 from repro.core.dram import DRAMConfig
+from repro.kernels._platform import resolve_pallas
 from repro.core.engine import TraceBatch, decode
 from repro.core.trace import Trace
 from repro.kernels.dram_timing.dram_timing import (
@@ -41,13 +41,12 @@ def simulate_trace(
 ) -> dict:
     """Time a single-channel trace; returns cycles + row-buffer stats.
 
-    ``use_pallas=None`` auto-selects: the Pallas kernel on TPU backends,
-    the scan oracle elsewhere (interpret-mode Pallas is for tests)."""
+    ``use_pallas=None`` auto-selects via ``kernels._platform``: the compiled
+    Pallas kernel on TPU backends, interpret-mode Pallas elsewhere; pass
+    ``use_pallas=False`` for the scan oracle."""
     if trace.n == 0:
         return dict(cycles=0, hits=0, misses=0, conflicts=0)
-    on_tpu = jax.default_backend() == "tpu"
-    if use_pallas is None:
-        use_pallas = on_tpu
+    use_pallas, interpret = resolve_pallas(use_pallas, interpret)
     bank, row = decode(trace.lines, cfg)
     kw = _timing_kwargs(cfg)
     if use_pallas:
@@ -55,10 +54,8 @@ def simulate_trace(
         if pad:
             bank = np.concatenate([bank, np.full(pad, -1, dtype=bank.dtype)])
             row = np.concatenate([row, np.zeros(pad, dtype=row.dtype)])
-        out = dram_timing_pallas(
-            bank, row, block=block,
-            interpret=(not on_tpu) if interpret is None else interpret, **kw,
-        )
+        out = dram_timing_pallas(bank, row, block=block, interpret=interpret,
+                                 **kw)
     else:
         out = dram_timing_ref(bank, row, **kw)
     return _result(np.asarray(out))
@@ -80,19 +77,15 @@ def simulate_trace_batch(
     stats dict per trace, in order, identical to ``simulate_trace``."""
     if not traces:
         return []
-    on_tpu = jax.default_backend() == "tpu"
-    if use_pallas is None:
-        use_pallas = on_tpu
+    use_pallas, interpret = resolve_pallas(use_pallas, interpret)
     assert block & (block - 1) == 0, "block must be a power of two"
     # min_len=block makes the pow2 bucket a block multiple, as the grid needs
     batch = TraceBatch.from_traces(traces, cfg, min_len=block, pad_batch=False)
     bank, row = batch.bank, batch.row
     kw = _timing_kwargs(cfg)
     if use_pallas:
-        out = dram_timing_pallas_batch(
-            bank, row, block=block,
-            interpret=(not on_tpu) if interpret is None else interpret, **kw,
-        )
+        out = dram_timing_pallas_batch(bank, row, block=block,
+                                       interpret=interpret, **kw)
     else:
         out = dram_timing_ref_batch(bank, row, **kw)
     out = np.asarray(out)

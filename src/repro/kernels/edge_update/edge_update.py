@@ -20,19 +20,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def sentinel_max(dtype) -> jnp.ndarray:
+    """The min-identity for ``dtype``: +inf for floats, the dtype max for
+    integers (WCC labels and other integer-valued problems have no inf)."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
 def _kernel(src_ref, dst_ref, delta_ref, values_ref, out_ref):
     step = pl.program_id(0)
+    top = sentinel_max(out_ref.dtype)
 
     @pl.when(step == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref[...], jnp.inf)
+        out_ref[...] = jnp.full_like(out_ref[...], top)
 
     src = src_ref[0, :]
     dst = dst_ref[0, :]
     delta = delta_ref[0, :]
-    valid = src >= 0
-    cand = jnp.take(values_ref[...], jnp.maximum(src, 0)) + delta
-    cand = jnp.where(valid, cand, jnp.inf)
+    sv = jnp.take(values_ref[...], jnp.maximum(src, 0))
+    # sv == top means "unreached": keep it saturated instead of adding delta
+    # (integer dtypes would overflow; float inf absorbs the add anyway)
+    valid = (src >= 0) & (sv != top)
+    cand = jnp.where(valid, sv + delta, top)
     acc = out_ref[...]
     out_ref[...] = acc.at[jnp.maximum(dst, 0)].min(cand)
 
@@ -41,8 +53,8 @@ def _kernel(src_ref, dst_ref, delta_ref, values_ref, out_ref):
 def edge_update_pallas(
     src: jnp.ndarray,  # (m_pad,) int32, -1 padding
     dst: jnp.ndarray,  # (m_pad,) int32
-    delta: jnp.ndarray,  # (m_pad,) f32
-    values: jnp.ndarray,  # (n,) f32
+    delta: jnp.ndarray,  # (m_pad,) same dtype as values
+    values: jnp.ndarray,  # (n,) float or integer dtype
     *,
     block: int = 1024,
     interpret: bool = True,
@@ -62,6 +74,6 @@ def edge_update_pallas(
             pl.BlockSpec((n,), lambda i: (0,)),  # values resident in VMEM
         ],
         out_specs=pl.BlockSpec((n,), lambda i: (0,)),  # accumulator resident
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n,), values.dtype),
         interpret=interpret,
     )(src.reshape(1, m), dst.reshape(1, m), delta.reshape(1, m), values)

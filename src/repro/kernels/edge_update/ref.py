@@ -4,8 +4,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.edge_update.edge_update import sentinel_max
+
 
 def edge_update_ref(src, dst, delta, values, n: int) -> jnp.ndarray:
-    cand = jnp.take(values, jnp.maximum(src, 0)) + delta
-    cand = jnp.where(src >= 0, cand, jnp.inf)
+    top = sentinel_max(values.dtype)
+    sv = jnp.take(values, jnp.maximum(src, 0))
+    # saturate unreached sources (integer dtypes would overflow on + delta)
+    valid = (src >= 0) & (sv != top)
+    cand = jnp.where(valid, sv + delta, top)
     return jax.ops.segment_min(cand, jnp.maximum(dst, 0), num_segments=n)

@@ -57,6 +57,7 @@ def spec_to_wire(spec: SweepSpec) -> dict:
             for o in spec.overrides],
         reorders=list(spec.reorders),
         interval_scales=list(spec.interval_scales),
+        engines=list(spec.engines),
     )
 
 
@@ -88,7 +89,7 @@ def spec_from_wire(d: dict) -> SweepSpec:
         raise ProtocolError(f"unknown spec field(s): {', '.join(unknown)}")
     kw: dict = dict(name=d["name"])
     for axis in ("accelerators", "problems", "page_policies", "reorders",
-                 "mappings"):
+                 "mappings", "engines"):
         if axis in d:
             kw[axis] = tuple(d[axis])
     if "graphs" in d:

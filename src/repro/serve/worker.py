@@ -30,6 +30,7 @@ def init_worker(artifacts_capacity: int = ARTIFACTS_CAPACITY,
                         semantics_capacity=semantics_capacity)
     import repro.core.accelerators  # noqa: F401  (registers the models)
     import repro.core.engine  # noqa: F401
+    import repro.core.semexec  # noqa: F401  (device semantic-execution path)
 
 
 def run_chunk(

@@ -71,6 +71,7 @@ def build_spec(args: argparse.Namespace) -> SweepSpec:
         overrides=overrides,
         reorders=_csv_list(args.reorders) or ("identity",),
         interval_scales=scales,
+        engines=_csv_list(args.engines) or ("numpy",),
     )
 
 
@@ -104,6 +105,10 @@ def add_spec_args(ap: argparse.ArgumentParser) -> None:
                     help="power-of-two multipliers on each accelerator's "
                          "interval size (e.g. 1,2,4; combinations a model "
                          "rejects are filtered, not errors)")
+    ap.add_argument("--engines", default="numpy",
+                    help="semantic execution engines (numpy,device); device "
+                         "falls back to numpy, with a warning, on "
+                         "accelerator/problem pairs without a device path")
     ap.add_argument("--engine", default="", help="DRAM engine override (scan|fast)")
 
 

@@ -51,6 +51,7 @@ def scenario_key(s: Scenario) -> dict:
             scan_cutoff=s.config.scan_cutoff,
             reorder=s.config.reorder,
             interval_scale=s.config.interval_scale,
+            semexec=s.config.semexec,
         ),
     )
 

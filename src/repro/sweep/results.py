@@ -38,6 +38,7 @@ def scenario_row(scenario, record: dict, status: str | None = None) -> dict | No
         pseudo_channels=int(s.dram.pseudo_channels),
         reorder=s.config.reorder,
         interval_scale=s.config.interval_scale,
+        engine=s.config.semexec,  # requested; overridden by resolved below
         label=s.label,
     )
     if status is not None:
@@ -49,6 +50,8 @@ def scenario_row(scenario, record: dict, status: str | None = None) -> dict | No
         gs = record.get("graph_stats", {})
         lay = rep.layout or {}
         balance = lay.get("balance") or {}
+        if lay.get("engine"):
+            row["engine"] = lay["engine"]  # engine that actually ran
         row.update(
             n=rep.n,
             m=rep.m,

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.graphsim import default_config
+from repro.core import semexec
 from repro.core.accelerators import ACCELERATORS
 from repro.core.accelerators.base import AccelConfig
 from repro.core.dram import (
@@ -83,6 +84,8 @@ class Scenario:
             parts.append(self.config.reorder)
         if self.config.interval_scale != 1:
             parts.append(f"ivx{self.config.interval_scale}")
+        if self.config.semexec != "numpy":
+            parts.append(self.config.semexec)
         if self.label:
             parts.append(self.label)
         return "/".join(parts)
@@ -149,10 +152,16 @@ class SweepSpec:
         ``interval_size`` (partition granularity axis); combinations a
         model rejects (ForeGraph past the 65,536 cap) are filtered to
         :class:`Skipped`.
+      engines: semantic execution engines (``numpy`` | ``device`` —
+        ``repro.core.semexec.ENGINES``); a requested ``device`` engine
+        falls back to numpy (with a warning) on accelerator/problem pairs
+        without a device path, and the result rows record the engine that
+        actually ran.
 
     Expansion order is graphs, accelerators, problems, drams, mappings,
-    page policies, pseudo-channels, overrides, reorders, interval scales —
-    stable, so result rows are deterministic regardless of execution order.
+    page policies, pseudo-channels, overrides, reorders, interval scales,
+    engines — stable, so result rows are deterministic regardless of
+    execution order.
     """
 
     name: str
@@ -166,6 +175,7 @@ class SweepSpec:
     overrides: tuple[ConfigOverride, ...] = (ConfigOverride(),)
     reorders: tuple[str, ...] = ("identity",)
     interval_scales: tuple[int, ...] = (1,)
+    engines: tuple[str, ...] = ("numpy",)
 
     def _validate(self) -> None:
         """Clean errors for unknown axis names (instead of a KeyError deep
@@ -197,6 +207,7 @@ class SweepSpec:
         check("reorder(s)", self.reorders, REORDERS)
         for scale in self.interval_scales:
             validate_interval_scale(scale)
+        check("engine(s)", self.engines, semexec.ENGINES)
 
     def _memory_axes(self):
         """The resolved (mapping, page_policy, pseudo_channels) cross
@@ -271,28 +282,30 @@ class SweepSpec:
                                 base_cfg = ov.apply(base_cfg)
                                 for reorder in self.reorders:
                                     for scale in self.interval_scales:
-                                        try:
-                                            cfg = dataclasses.replace(
-                                                base_cfg, reorder=reorder,
-                                                interval_scale=scale)
-                                            cls(cfg)  # model-side validation
-                                        except ValueError as e:
-                                            skip(str(e), ov.label)
-                                            continue
-                                        scenarios.append(Scenario(
-                                            graph=gspec,
-                                            accelerator=accel,
-                                            problem=prob,
-                                            dram=dram_config(
-                                                dname, channels=channels,
-                                                mapping=mapping,
-                                                page_policy=policy,
-                                                pseudo_channels=pc,
-                                            ),
-                                            config=cfg,
-                                            root=gspec.root,
-                                            label=ov.label,
-                                        ))
+                                        for eng in self.engines:
+                                            try:
+                                                cfg = dataclasses.replace(
+                                                    base_cfg, reorder=reorder,
+                                                    interval_scale=scale,
+                                                    semexec=eng)
+                                                cls(cfg)  # model-side validation
+                                            except ValueError as e:
+                                                skip(str(e), ov.label)
+                                                continue
+                                            scenarios.append(Scenario(
+                                                graph=gspec,
+                                                accelerator=accel,
+                                                problem=prob,
+                                                dram=dram_config(
+                                                    dname, channels=channels,
+                                                    mapping=mapping,
+                                                    page_policy=policy,
+                                                    pseudo_channels=pc,
+                                                ),
+                                                config=cfg,
+                                                root=gspec.root,
+                                                label=ov.label,
+                                            ))
         return scenarios, skipped
 
     def scenarios(self) -> list[Scenario]:

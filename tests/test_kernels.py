@@ -16,9 +16,10 @@ from repro.kernels.attention.ops import flash_attention
 from repro.kernels.attention.ref import attention_ref
 from repro.kernels.dram_timing.ops import simulate_trace, simulate_trace_batch
 from repro.kernels.dram_timing.ref import dram_timing_ref, dram_timing_ref_batch
-from repro.kernels.edge_update.ops import relax_step
+from repro.kernels.edge_update.edge_update import sentinel_max
+from repro.kernels.edge_update.ops import relax_step, scatter_min
 from repro.kernels.edge_update.ref import edge_update_ref
-from repro.kernels.spmv.ops import spmv
+from repro.kernels.spmv.ops import spmv, spmv_edges
 from repro.kernels.spmv.ref import spmv_coo_ref
 
 
@@ -204,3 +205,110 @@ def test_edge_update_kernel_matches_ref(problem, block):
     )
     ref = np.minimum(values, acc)
     np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+
+def _scatter_min_oracle(src, dst, delta, values, n, mask=None):
+    """Numpy oracle with the kernel's saturation contract: min is exact, so
+    the comparison is bit-equality, not allclose."""
+    top = np.asarray(sentinel_max(values.dtype))
+    acc = np.full(n, top, dtype=values.dtype)
+    keep = src >= 0
+    if mask is not None:
+        keep &= mask
+    sv = values[np.maximum(src, 0)]
+    keep &= sv != top  # saturated sources stay saturated (int overflow)
+    np.minimum.at(acc, dst[keep], (sv + delta.astype(values.dtype))[keep])
+    return acc
+
+
+# 64-bit dtypes need jax_enable_x64 (off in this deployment — jnp would
+# silently truncate the sentinel to 32 bits and the test would lie)
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_scatter_min_dtype_sentinel(dtype):
+    """Integer dtypes must saturate unreached sources at the dtype max
+    instead of overflowing on + delta; floats use +inf."""
+    n, m = 50, 400
+    rng = np.random.default_rng(11)
+    src = rng.integers(0, n, size=m).astype(np.int32)
+    dst = rng.integers(0, n, size=m).astype(np.int32)
+    delta = rng.integers(1, 5, size=m)
+    top = np.asarray(sentinel_max(dtype))
+    values = np.where(rng.random(n) < 0.5,
+                      rng.integers(0, 100, size=n), top).astype(dtype)
+    out = np.asarray(scatter_min(
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(delta, dtype=dtype),
+        jnp.asarray(values), use_pallas=None, interpret=None))
+    ref = _scatter_min_oracle(src, dst, delta.astype(dtype), values, n)
+    np.testing.assert_array_equal(out, ref)
+    assert not np.any(out < 0) if np.issubdtype(np.dtype(dtype), np.integer) \
+        else True  # overflow would wrap negative
+
+
+def test_scatter_min_padding_edges_are_noops():
+    """src == -1 padding edges (the semexec block-padding convention) and
+    masked-out edges contribute nothing, wherever their dst points."""
+    n = 16
+    values = np.arange(n, dtype=np.float32)
+    src = np.array([0, -1, 3, -1], dtype=np.int32)
+    dst = np.array([5, 0, 5, 7], dtype=np.int32)
+    delta = np.ones(4, dtype=np.float32)
+    out = np.asarray(scatter_min(jnp.asarray(src), jnp.asarray(dst),
+                                 jnp.asarray(delta), jnp.asarray(values)))
+    assert out[5] == 1.0  # min(0+1, 3+1)
+    assert out[0] == np.inf and out[7] == np.inf  # padding did not land
+    # an explicit mask drops a live edge the same way
+    mask = np.array([False, True, True, True])
+    out2 = np.asarray(scatter_min(jnp.asarray(src), jnp.asarray(dst),
+                                  jnp.asarray(delta), jnp.asarray(values),
+                                  mask=jnp.asarray(mask)))
+    assert out2[5] == 4.0
+
+
+def test_scatter_min_empty_frontier_and_isolated_vertices():
+    """All edges masked (empty frontier) -> all-sentinel accumulator;
+    vertices with no in-edges always hold the sentinel."""
+    n, m = 12, 30
+    rng = np.random.default_rng(5)
+    src = rng.integers(0, n // 2, size=m).astype(np.int32)
+    dst = rng.integers(0, n // 2, size=m).astype(np.int32)
+    delta = rng.random(m).astype(np.float32)
+    values = rng.random(n).astype(np.float32)
+    empty = np.asarray(scatter_min(
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(delta),
+        jnp.asarray(values), mask=jnp.zeros(m, dtype=bool)))
+    assert np.all(np.isinf(empty))
+    out = np.asarray(scatter_min(jnp.asarray(src), jnp.asarray(dst),
+                                 jnp.asarray(delta), jnp.asarray(values)))
+    assert np.all(np.isinf(out[n // 2:]))  # isolated upper half
+    ref = _scatter_min_oracle(src, dst, delta, values, n)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_scatter_min_zero_edges():
+    """m == 0 (a partition with no edges) must not trip the Pallas grid."""
+    values = np.array([1.0, np.inf], dtype=np.float32)
+    out = np.asarray(scatter_min(
+        jnp.zeros(0, dtype=jnp.int32), jnp.zeros(0, dtype=jnp.int32),
+        jnp.zeros(0, dtype=jnp.float32), jnp.asarray(values)))
+    assert np.all(np.isinf(out))
+
+
+def test_spmv_edges_padding_and_isolated():
+    """Zero-weight padding edges routed to vertex 0 (the semexec layout
+    convention) leave the result untouched; rows with no edges stay 0."""
+    n, m = 20, 60
+    rng = np.random.default_rng(9)
+    src = rng.integers(0, n, size=m).astype(np.int32)
+    dst = rng.integers(0, n // 2, size=m).astype(np.int32)
+    w = rng.random(m).astype(np.float32)
+    x = rng.random(n).astype(np.float32)
+    y = np.asarray(spmv_edges(jnp.asarray(src), jnp.asarray(dst),
+                              jnp.asarray(w), jnp.asarray(x), n))
+    pad = 17
+    srcp = np.concatenate([src, np.zeros(pad, dtype=np.int32)])
+    dstp = np.concatenate([dst, np.zeros(pad, dtype=np.int32)])
+    wp = np.concatenate([w, np.zeros(pad, dtype=np.float32)])
+    yp = np.asarray(spmv_edges(jnp.asarray(srcp), jnp.asarray(dstp),
+                               jnp.asarray(wp), jnp.asarray(x), n))
+    np.testing.assert_array_equal(y, yp)
+    assert np.all(y[n // 2:] == 0.0)  # no in-edges -> empty sum

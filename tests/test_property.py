@@ -371,3 +371,80 @@ def test_divisible_spec_always_divides(shape, mesh_shape):
     for dim, entry in enumerate(spec):
         if entry is not None:
             assert shape[dim] % d[entry] == 0
+
+
+# ---------------------------------------------------------------------------
+# kernel oracles (scatter_min / spmv_edges vs their numpy references)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def coo_graphs(draw, max_n=40, max_m=150):
+    """Random COO edge sets with the degenerate shapes the semexec layouts
+    produce: padding edges (src == -1), empty edge sets, isolated vertices
+    (n can far exceed the touched id range)."""
+    n = draw(st.integers(1, max_n))
+    m = draw(st.integers(0, max_m))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m).astype(np.int32)
+    dst = rng.integers(0, n, size=m).astype(np.int32)
+    # sprinkle padding edges the way the device layouts do
+    pad_mask = rng.random(m) < 0.2
+    src[pad_mask] = -1
+    dst[pad_mask] = 0
+    return n, src, dst, rng
+
+
+@given(coo_graphs(), st.booleans(), st.floats(0.0, 8.0))
+@settings(max_examples=60, deadline=None)
+def test_scatter_min_matches_numpy_oracle(g, with_mask, reach_p):
+    import jax.numpy as jnp
+    from repro.kernels.edge_update.edge_update import sentinel_max
+    from repro.kernels.edge_update.ops import scatter_min
+
+    n, src, dst, rng = g
+    m = len(src)
+    delta = rng.random(m).astype(np.float32)
+    # mix of reached and unreached (inf) vertices — the empty-frontier
+    # extreme included when reach_p rounds to 0
+    values = np.where(rng.random(n) * 8 < reach_p,
+                      rng.random(n) * 10, np.inf).astype(np.float32)
+    mask = rng.random(m) < 0.7 if with_mask else None
+    out = np.asarray(scatter_min(
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(delta),
+        jnp.asarray(values),
+        mask=None if mask is None else jnp.asarray(mask)))
+    top = np.asarray(sentinel_max(np.float32))
+    acc = np.full(n, top, dtype=np.float32)
+    keep = src >= 0
+    if mask is not None:
+        keep &= mask
+    sv = values[np.maximum(src, 0)]
+    keep &= sv != top
+    np.minimum.at(acc, dst[keep], (sv + delta)[keep])
+    # min is order-independent and exact: bit equality, not allclose
+    np.testing.assert_array_equal(out, acc)
+
+
+@given(coo_graphs())
+@settings(max_examples=60, deadline=None)
+def test_spmv_edges_matches_numpy_oracle(g):
+    import jax.numpy as jnp
+    from repro.kernels.spmv.ops import spmv_edges
+
+    n, src, dst, rng = g
+    m = len(src)
+    # padding edges carry weight 0 in the device layouts (src -1 is only a
+    # scatter_min convention); make them no-ops the same way here
+    w = rng.random(m).astype(np.float32)
+    w[src < 0] = 0.0
+    src = np.maximum(src, 0)
+    x = rng.random(n).astype(np.float32)
+    y = np.asarray(spmv_edges(jnp.asarray(src), jnp.asarray(dst),
+                              jnp.asarray(w), jnp.asarray(x), n))
+    ref = np.zeros(n, dtype=np.float32)
+    np.add.at(ref, dst, w * x[src])
+    # sums associate differently (segment_sum vs np.add.at): tolerance
+    np.testing.assert_allclose(y, ref, rtol=1e-5, atol=1e-6)
+    assert y.shape == (n,)
