@@ -1,15 +1,46 @@
 """Distribution: mesh axes, parameter/activation/cache sharding rules,
 collective helpers for the production meshes (single-pod 16x16, multi-pod
-2x16x16), and the persistent spawn-based worker pool the sweep server
-shards scenario chunks across (:mod:`repro.distributed.workpool`)."""
-from repro.distributed.sharding import (
-    batch_axes,
-    batch_specs,
-    cache_specs,
-    param_specs,
-    shardings,
-)
-from repro.distributed.workpool import WorkerPool
+2x16x16), the persistent spawn-based worker pool the sweep server shards
+scenario chunks across (:mod:`repro.distributed.workpool`), and the
+deterministic fault-injection harness that exercises its recovery paths
+(:mod:`repro.distributed.faults`).
 
-__all__ = ["WorkerPool", "batch_axes", "batch_specs", "cache_specs",
-           "param_specs", "shardings"]
+Exports resolve lazily: :mod:`~repro.distributed.sharding` pulls in jax,
+and spawn-context worker children import this package on their way to
+``workpool`` — they must not pay (or require) the jax import just to run
+the worker loop.
+"""
+from __future__ import annotations
+
+__all__ = ["WorkerPool", "WorkerLost", "FaultPlan", "FaultRule",
+           "batch_axes", "batch_specs", "cache_specs", "param_specs",
+           "shardings"]
+
+_LAZY = {
+    "WorkerPool": ("repro.distributed.workpool", "WorkerPool"),
+    "WorkerLost": ("repro.distributed.workpool", "WorkerLost"),
+    "FaultPlan": ("repro.distributed.faults", "FaultPlan"),
+    "FaultRule": ("repro.distributed.faults", "FaultRule"),
+    "batch_axes": ("repro.distributed.sharding", "batch_axes"),
+    "batch_specs": ("repro.distributed.sharding", "batch_specs"),
+    "cache_specs": ("repro.distributed.sharding", "cache_specs"),
+    "param_specs": ("repro.distributed.sharding", "param_specs"),
+    "shardings": ("repro.distributed.sharding", "shardings"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

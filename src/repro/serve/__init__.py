@@ -23,10 +23,20 @@ Rows are byte-identical to ``python -m repro.sweep`` output for the same
 spec and cache state: both paths share the runner, the cache keys, and
 :func:`repro.sweep.results.scenario_row`.
 
+Partial failure is survivable at every layer: crashed/hung workers are
+detected and respawned by the supervised pool
+(:mod:`repro.distributed.workpool`), their chunks re-dispatched (with a
+poison-scenario circuit breaker), accepted jobs are journaled
+(:mod:`repro.serve.journal`) so a restarted server resumes unfinished
+work from the journal plus the cache, and every recovery path is
+exercised deterministically through
+:mod:`repro.distributed.faults`.
+
 The seed's LLM-serving scaffolding (batched KV-cache engine) lives on in
 :mod:`repro.serve.legacy`.
 """
 from repro.serve.client import JobResult, ServeClient, ServeError
+from repro.serve.journal import JobJournal
 from repro.serve.protocol import (
     ProtocolError,
     dump_event,
@@ -38,6 +48,7 @@ from repro.serve.scheduler import TERMINAL_EVENTS, JobState, SweepScheduler
 from repro.serve.server import SweepServer
 
 __all__ = [
+    "JobJournal",
     "JobResult",
     "JobState",
     "ProtocolError",

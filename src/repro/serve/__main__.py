@@ -34,10 +34,24 @@ from repro.sweep.__main__ import (
 from repro.sweep.results import write_csv, write_json
 
 
+def _load_faults(arg: str):
+    """``--faults`` accepts inline JSON or ``@path/to/plan.json``."""
+    if not arg:
+        return None
+    from repro.distributed.faults import plan_from_json
+
+    text = arg
+    if arg.startswith("@"):
+        with open(arg[1:]) as f:
+            text = f.read()
+    return plan_from_json(text)
+
+
 def _serve(args: argparse.Namespace) -> int:
     try:
         policy = build_policy(args)
-    except ValueError as e:
+        fault_plan = _load_faults(args.faults)
+    except (OSError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
     server = SweepServer(
@@ -46,6 +60,10 @@ def _serve(args: argparse.Namespace) -> int:
         workers=args.workers, mode=args.mode, policy=policy,
         chunk_size=args.chunk_size, trace_hashes=args.trace_hashes,
         quiet=args.quiet,
+        poison_threshold=args.poison_threshold,
+        fault_plan=fault_plan,
+        worker_deadline_s=args.worker_deadline or None,
+        resume=not args.no_resume,
     )
     server.install_signal_handlers()
     server.start()
@@ -119,6 +137,20 @@ def main(argv: list[str] | None = None) -> int:
                          "(golden-hash verification)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress structured logs on stderr")
+    # fault-tolerance knobs
+    ap.add_argument("--poison-threshold", type=int, default=3,
+                    help="dispatch attempts before a scenario that keeps "
+                         "killing workers is quarantined as an error row")
+    ap.add_argument("--worker-deadline", type=float, default=300.0,
+                    help="per-chunk liveness deadline in seconds; a worker "
+                         "sitting on a chunk longer is killed and the chunk "
+                         "re-dispatched (0 disables)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault-injection plan: inline JSON "
+                         "or @file (testing/chaos benchmarking only)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="skip journal recovery of unfinished jobs from a "
+                         "previous server run")
     add_policy_args(ap)
     # client knobs
     ap.add_argument("--out", default="results/served",

@@ -66,6 +66,12 @@ class JobResult:
     def n_errors(self) -> int:
         return sum(s == "error" for s in self.statuses)
 
+    @property
+    def n_poisoned(self) -> int:
+        """Error rows from the scheduler's poison circuit breaker (the
+        scenario repeatedly killed its workers and was quarantined)."""
+        return sum(bool(e.get("poison")) for e in self.row_events)
+
 
 class ServeClient:
     def __init__(self, address: str, timeout: float = 600.0):

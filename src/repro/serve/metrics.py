@@ -2,8 +2,10 @@
 
 Everything the ``/stats`` endpoint exports lives here: monotonic counters
 (cache hits, in-flight joins, dedup collapses, executed ok/error, retries,
-timeouts...), and per-stage latency histograms (spec expansion, queue
-wait, chunk execution, submit-to-row latency).  Histograms keep exact
+timeouts, and the fault-tolerance ledger — chunks_lost,
+scenarios_redispatched, scenarios_poisoned, corrupt_records,
+faults_injected, jobs_recovered...), and per-stage latency histograms
+(spec expansion, queue wait, chunk execution, submit-to-row latency).  Histograms keep exact
 count/sum/max plus a bounded reservoir of recent samples for the p50/p95
 quantiles — at serve scale the recent window is what an operator watches
 anyway.

@@ -13,7 +13,11 @@ of newline-delimited JSON events::
 dicts, and ``index`` is the scenario's position in the spec's expansion
 order — reassembling rows by index reproduces the CLI export byte for
 byte.  Events may carry auxiliary fields (``trace_hash`` when the server
-runs with golden-hash fingerprinting); those never leak into ``row``.
+runs with golden-hash fingerprinting, ``poison: true`` on an error row
+the scheduler's circuit breaker quarantined because the scenario kept
+killing its workers); those never leak into ``row`` — except the error
+row's own ``attempts``/``last_error``/``poison`` audit columns, which are
+part of the :func:`~repro.sweep.results.scenario_row` shape itself.
 
 The wire spec is a plain-JSON rendering of :class:`repro.sweep.SweepSpec`:
 axis lists of strings stay strings, inline :class:`GraphSpec` recipes

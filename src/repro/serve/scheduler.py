@@ -22,6 +22,31 @@ subscribed job gets its row event.  ``drain()`` is the SIGTERM path: stop
 dispatching, let running chunks finish (their rows are cached and
 delivered), cancel what never started, and mark still-open jobs
 interrupted — a re-submission resumes from the cache.
+
+Fault tolerance (three layers, each independent):
+
+- **Lost chunks re-dispatch.**  The supervised pool fails a dead worker's
+  chunk with :class:`~repro.distributed.workpool.WorkerLost`; every
+  scenario of the chunk goes back on the queue with its per-entry attempt
+  ledger bumped and its ``suspect`` flag set, so the retry runs as a
+  *singleton* chunk — a poison scenario can no longer take innocent
+  neighbours down with it.  A scenario whose dispatches have killed
+  ``poison_threshold`` workers trips the circuit breaker: it is
+  quarantined as a structured error row (``poison: true``, never cached)
+  instead of crash-looping the pool.  Records that come back malformed
+  (truncated pickles, corrupt payloads) are caught by validation and take
+  the same path.
+- **Crash-safe job journal.**  Accepted jobs are fsynced to an
+  append-only journal under the cache dir before the submission is
+  acknowledged; ``done``/``cancelled`` append a terminal op, interruption
+  does not.  A restarted scheduler replays open jobs from the journal —
+  finished scenarios are cache hits, so only the unfinished tail
+  re-executes, and clients reconnect via ``GET /jobs/<id>``.
+- **Deterministic fault injection.**  An optional
+  :class:`~repro.distributed.faults.FaultPlan` is consulted at every
+  chunk dispatch (indexed by the scheduler's global dispatch counter, so
+  the schedule is reproducible regardless of worker interleaving) and the
+  resulting action ships inside the chunk for the worker to apply.
 """
 from __future__ import annotations
 
@@ -34,8 +59,9 @@ from collections import Counter, deque
 from concurrent.futures import CancelledError
 from typing import Callable
 
-from repro.distributed.workpool import WorkerPool
+from repro.distributed.workpool import WorkerLost, WorkerPool
 from repro.serve import worker as worker_mod
+from repro.serve.journal import JobJournal
 from repro.serve.metrics import Metrics
 from repro.sweep.cache import ResultCache
 from repro.sweep.results import scenario_row
@@ -60,6 +86,7 @@ class JobState:
         self.counts: Counter = Counter()
         self.cancelled = False
         self.finished = False
+        self.recovered = False
         self.t_submit = time.time()
         self.events: queue.Queue = queue.Queue()
 
@@ -76,20 +103,27 @@ class JobState:
             skipped=len(self.skipped),
             cancelled=self.cancelled,
             finished=self.finished,
+            recovered=self.recovered,
             age_s=round(time.time() - self.t_submit, 3),
         )
 
 
 class _Entry:
-    """One unique pending scenario shared by all jobs that requested it."""
+    """One unique pending scenario shared by all jobs that requested it.
+    ``attempts`` counts dispatches that ended in a lost worker or a corrupt
+    record; a suspect entry re-dispatches alone and is quarantined once the
+    ledger reaches the scheduler's poison threshold."""
 
-    __slots__ = ("scenario", "status", "subscribers", "t_queued")
+    __slots__ = ("scenario", "status", "subscribers", "t_queued",
+                 "attempts", "suspect")
 
     def __init__(self, scenario: Scenario):
         self.scenario = scenario
         self.status = "queued"  # queued | running
         self.subscribers: list[tuple[JobState, int]] = []
         self.t_queued = time.time()
+        self.attempts = 0
+        self.suspect = False
 
 
 class SweepScheduler:
@@ -107,6 +141,10 @@ class SweepScheduler:
         history: int = 256,
         log: Callable[..., None] | None = None,
         pool_factory: Callable[[], object] | None = None,
+        poison_threshold: int = 3,
+        fault_plan=None,
+        worker_deadline_s: float | None = 300.0,
+        resume: bool = True,
     ):
         if mode not in ("scenario", "batch"):
             raise ValueError(f"unknown mode {mode!r} (use scenario|batch)")
@@ -116,14 +154,21 @@ class SweepScheduler:
         self.chunk_size = max(1, chunk_size)
         self.trace_hashes = trace_hashes
         self.history = history
+        self.poison_threshold = max(1, poison_threshold)
+        self.fault_plan = fault_plan
         self.metrics = Metrics()
         self.log = log or (lambda event, **kw: None)
         self.t_start = time.time()
 
         self.pool = (pool_factory() if pool_factory is not None
                      else WorkerPool(max(1, workers),
-                                     initializer=worker_mod.init_worker))
+                                     initializer=worker_mod.init_worker,
+                                     task_deadline_s=worker_deadline_s))
         self._max_inflight = 2 * getattr(self.pool, "size", workers)
+
+        self.journal = JobJournal(cache_dir) if cache_dir else None
+        if self.journal is not None:
+            self.journal.compact()
 
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
@@ -132,6 +177,7 @@ class SweepScheduler:
         self._entries: dict[str, _Entry] = {}
         self._queue: deque[str] = deque()
         self._inflight = 0
+        self._dispatches = 0
         self._draining = False
         self._closed = False
         self._ids = itertools.count(1)
@@ -139,6 +185,8 @@ class SweepScheduler:
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name="sweep-dispatcher", daemon=True)
         self._dispatcher.start()
+        if resume and self.journal is not None:
+            self._recover_jobs()
 
     # ---- submission --------------------------------------------------------
 
@@ -146,6 +194,10 @@ class SweepScheduler:
         """Expand, dedup against cache and in-flight work, enqueue misses.
         Raises ``ValueError`` on a bad spec and ``RuntimeError`` once the
         scheduler is draining."""
+        return self._submit_internal(spec)
+
+    def _submit_internal(self, spec: SweepSpec, job_id: str | None = None,
+                         recovered: bool = False) -> JobState:
         t0 = time.time()
         scenarios, skipped = spec.expand()  # ValueError -> caller's 4xx
         plan = plan_scenarios(scenarios, self.cache)
@@ -154,14 +206,22 @@ class SweepScheduler:
         with self._lock:
             if self._draining or self._closed:
                 raise RuntimeError("server is draining; not accepting jobs")
-            job = JobState(f"job-{next(self._ids):06d}", spec,
+            job = JobState(job_id or f"job-{next(self._ids):06d}", spec,
                            scenarios, plan.hashes, skipped)
+            job.recovered = recovered
+            if self.journal is not None and not recovered:
+                # durable before acknowledged: a crash after this point
+                # resumes the job instead of silently dropping it
+                from repro.serve.protocol import spec_to_wire
+                self.journal.record_job(job.id, spec.name, spec_to_wire(spec))
             self._jobs[job.id] = job
             self._job_order.append(job.id)
             self._prune_jobs()
             self.metrics.inc("jobs_submitted")
             self.metrics.inc("scenarios_submitted", len(scenarios))
             self.metrics.inc("scenarios_skipped", len(skipped))
+            if recovered:
+                self.metrics.inc("jobs_recovered")
 
             job.emit(dict(
                 type="job", job_id=job.id, name=job.name, total=job.total,
@@ -191,8 +251,33 @@ class SweepScheduler:
                 self._wake.notify_all()
         self.log("job_submitted", job=job.id, name=job.name,
                  total=job.total, cached=len(plan.cached),
-                 scheduled=scheduled, skipped=len(skipped))
+                 scheduled=scheduled, skipped=len(skipped),
+                 recovered=recovered)
         return job
+
+    def _recover_jobs(self) -> None:
+        """Resubmit journal-open jobs under their original ids.  Finished
+        scenarios come straight from the cache, so recovery re-executes only
+        the tail the dead server never got to."""
+        from repro.serve.protocol import spec_from_wire
+        open_ops = self.journal.load_open()
+        if not open_ops:
+            return
+        top = 0
+        for op in open_ops:
+            tail = op["id"].rsplit("-", 1)[-1]
+            if tail.isdigit():
+                top = max(top, int(tail))
+        self._ids = itertools.count(top + 1)  # never reuse a recovered id
+        for op in open_ops:
+            try:
+                spec = spec_from_wire(op["spec"])
+                self._submit_internal(spec, job_id=op["id"], recovered=True)
+            except Exception as e:
+                self.log("recover_failed", job=op.get("id"), error=repr(e))
+                if self.journal is not None:
+                    self.journal.record_end(op["id"], "unrecoverable")
+        self.log("recovered", jobs=len(open_ops))
 
     def _prune_jobs(self) -> None:
         while len(self._job_order) > self.history:
@@ -210,11 +295,15 @@ class SweepScheduler:
             return
         job.done += 1
         job.counts[status] += 1
+        if record.get("poison"):
+            job.counts["poisoned"] += 1
         row = scenario_row(job.scenarios[index], record)
         event = dict(type="row", job_id=job.id, index=index, status=status,
                      row=row, done=job.done, total=job.total)
         if "trace_hash" in record:
             event["trace_hash"] = record["trace_hash"]
+        if record.get("poison"):
+            event["poison"] = True
         job.emit(event)
         self.metrics.inc("rows_streamed")
         self.metrics.observe("row_s", time.time() - job.t_submit)
@@ -226,6 +315,11 @@ class SweepScheduler:
             return
         job.finished = True
         self.metrics.inc("jobs_completed")
+        if self.journal is not None:
+            try:
+                self.journal.record_end(job.id, "done")
+            except OSError:
+                pass  # a full disk must not take row delivery down
         job.emit(dict(type="done", job_id=job.id, total=job.total,
                       cached=job.counts["cached"], ok=job.counts["ok"],
                       errors=job.counts["error"]))
@@ -248,6 +342,55 @@ class SweepScheduler:
         for job, idx in entry.subscribers:
             self._deliver(job, idx, record, status)
 
+    # ---- loss handling (lock held) -----------------------------------------
+
+    def _requeue_or_quarantine(self, h: str, cause: str) -> None:
+        """A dispatch of this scenario lost its worker or produced garbage.
+        Re-dispatch it (alone — it is now a suspect), unless its attempt
+        ledger hit the poison threshold, in which case the circuit breaker
+        turns it into a structured, never-cached error row."""
+        entry = self._entries.get(h)
+        if entry is None:
+            return
+        if not entry.subscribers:
+            # every job that wanted it has cancelled: re-dispatching would
+            # execute (and cache) work nobody asked for
+            del self._entries[h]
+            self.metrics.inc("scenarios_cancelled")
+            return
+        entry.attempts += 1
+        entry.suspect = True
+        if not self._draining and entry.attempts >= self.poison_threshold:
+            self.metrics.inc("scenarios_poisoned")
+            self.log("scenario_poisoned", scenario=entry.scenario.scenario_id,
+                     attempts=entry.attempts, cause=cause)
+            self._complete_entry(h, dict(
+                status="error", poison=True, attempts=entry.attempts,
+                wall_s=0.0, last_error=cause,
+                error=(f"scenario quarantined after {entry.attempts} failed "
+                       f"dispatch attempts; last cause: {cause}")))
+        else:
+            self.metrics.inc("scenarios_redispatched")
+            entry.status = "queued"
+            entry.t_queued = time.time()
+            self._queue.append(h)
+            self._wake.notify_all()
+
+    def _record_valid(self, rec) -> bool:
+        """A worker record must be shaped like the runner made it; an ok
+        record must hold a reconstructible report — a corrupted payload must
+        never reach the cache or a client row."""
+        if not isinstance(rec, dict) or rec.get("status") not in ("ok",
+                                                                  "error"):
+            return False
+        if rec.get("status") == "ok":
+            from repro.core.metrics import SimReport
+            try:
+                SimReport.from_dict(rec["report"])
+            except Exception:
+                return False
+        return True
+
     # ---- dispatch ----------------------------------------------------------
 
     def _dispatch_loop(self) -> None:
@@ -264,20 +407,36 @@ class SweepScheduler:
                     entry = self._entries.get(h)
                     if entry is None:  # cancelled while queued
                         continue
+                    if entry.suspect and chunk_hashes:
+                        # suspects ride alone: if this one kills its worker
+                        # again, no innocent scenario shares the blast
+                        self._queue.appendleft(h)
+                        break
                     entry.status = "running"
                     self.metrics.observe("queue_wait_s",
                                          time.time() - entry.t_queued)
                     chunk_hashes.append(h)
+                    if entry.suspect:
+                        break
                 if not chunk_hashes:
                     continue
                 scenarios = [self._entries[h].scenario for h in chunk_hashes]
+                dispatch_idx = self._dispatches
+                self._dispatches += 1
                 self._inflight += 1
+            inject = None
+            if self.fault_plan is not None:
+                inject = self.fault_plan.action(
+                    "worker.chunk", index=dispatch_idx,
+                    keys=tuple(s.scenario_id for s in scenarios))
+                if inject is not None:
+                    self.metrics.inc("faults_injected")
             t0 = time.time()
             self.metrics.inc("chunks_dispatched")
             try:
                 fut = self.pool.submit(worker_mod.run_chunk, scenarios,
                                        self.mode, self.policy,
-                                       self.trace_hashes)
+                                       self.trace_hashes, inject)
             except Exception as e:  # broken pool must not kill the dispatcher
                 self.log("dispatch_failed", error=repr(e),
                          chunk=len(chunk_hashes))
@@ -294,6 +453,7 @@ class SweepScheduler:
                 lambda f, hs=chunk_hashes, t=t0: self._chunk_done(hs, t, f))
 
     def _chunk_done(self, chunk_hashes: list[str], t0: float, fut) -> None:
+        records = lost = None
         try:
             out = fut.result()
             records = out["records"]
@@ -301,23 +461,40 @@ class SweepScheduler:
                 for k, v in delta.items():
                     self.metrics.inc(f"worker_hostcache_{cache_name}_{k}", v)
             self.metrics.observe("execute_s", time.time() - t0)
+            if len(records) != len(chunk_hashes):
+                lost = (f"chunk returned {len(records)} records for "
+                        f"{len(chunk_hashes)} scenarios")
+                records = None
         except CancelledError:
-            records = None  # drain cancelled the chunk before it started
-            self.metrics.inc("chunks_cancelled")
-        except Exception as e:  # worker/pool-level failure
+            pass  # drain cancelled the chunk before it started
+        except WorkerLost as e:
+            lost = str(e)
+            self.metrics.inc("chunks_lost")
+            self.log("chunk_lost", reason=e.reason, worker=e.worker_id,
+                     chunk=len(chunk_hashes))
+        except Exception as e:  # worker raised: scenarios failed, not lost
             records = [dict(status="error",
                             error=f"worker chunk failed: {e!r}", wall_s=0.0)
                        ] * len(chunk_hashes)
             self.log("chunk_failed", error=repr(e), chunk=len(chunk_hashes))
         with self._wake:
-            if records is None:
+            if lost is not None:
+                for h in chunk_hashes:
+                    self._requeue_or_quarantine(h, lost)
+            elif records is None:  # cancelled
+                self.metrics.inc("chunks_cancelled")
                 for h in chunk_hashes:  # back to queued, for accounting only
                     entry = self._entries.get(h)
                     if entry is not None:
                         entry.status = "queued"
             else:
                 for h, rec in zip(chunk_hashes, records):
-                    self._complete_entry(h, rec)
+                    if self._record_valid(rec):
+                        self._complete_entry(h, rec)
+                    else:
+                        self.metrics.inc("corrupt_records")
+                        self._requeue_or_quarantine(
+                            h, "worker returned a corrupt record")
             self._inflight -= 1
             self._wake.notify_all()
 
@@ -330,13 +507,20 @@ class SweepScheduler:
     def cancel(self, job_id: str) -> bool:
         """Cancel a job: it stops receiving rows, and queued scenarios no
         other job wants are dropped.  Running chunks finish (and their
-        results are still cached for everyone's next submission)."""
+        results are still cached for everyone's next submission) — but a
+        running scenario that loses its worker after the cancel is dropped,
+        not re-dispatched, once no subscriber remains."""
         with self._lock:
             job = self._jobs.get(job_id)
             if job is None or job.finished or job.cancelled:
                 return False
             job.cancelled = True
             self.metrics.inc("jobs_cancelled")
+            if self.journal is not None:
+                try:
+                    self.journal.record_end(job.id, "cancelled")
+                except OSError:
+                    pass
             for h in list(self._entries):
                 entry = self._entries[h]
                 entry.subscribers = [(j, i) for j, i in entry.subscribers
@@ -354,7 +538,8 @@ class SweepScheduler:
     def drain(self, timeout: float | None = 60.0) -> None:
         """Graceful shutdown: reject new jobs, let running chunks finish
         (rows delivered and cached), cancel never-started chunks, then mark
-        open jobs interrupted so their streams terminate."""
+        open jobs interrupted so their streams terminate.  Interrupted jobs
+        keep no terminal journal op — a restarted server resumes them."""
         with self._wake:
             if self._closed:
                 return
@@ -363,7 +548,9 @@ class SweepScheduler:
         self.log("draining")
         self._dispatcher.join(timeout=10.0)
         # running chunks finish and deliver through their callbacks;
-        # executor-queued ones are cancelled
+        # executor-queued ones are cancelled.  The supervised pool bounds
+        # the wait: a hung worker is killed at its liveness deadline and
+        # its chunk comes back WorkerLost (requeued, not quarantined).
         self.pool.shutdown(wait=True, cancel_pending=True)
         deadline = time.time() + (timeout or 0.0)
         with self._wake:
@@ -394,6 +581,7 @@ class SweepScheduler:
             queue_depth = len(self._queue)
             running = sum(e.status == "running"
                           for e in self._entries.values())
+            suspects = sum(e.suspect for e in self._entries.values())
             active_jobs = sum(not j.finished and not j.cancelled
                               for j in self._jobs.values())
             draining = self._draining
@@ -401,17 +589,28 @@ class SweepScheduler:
         snap = self.metrics.snapshot()
         pool_stats = (self.pool.stats() if hasattr(self.pool, "stats")
                       else {})
+        counters = snap["counters"]
         return dict(
             uptime_s=round(time.time() - self.t_start, 3),
             draining=draining,
             queue=dict(depth=queue_depth, running=running,
-                       inflight_chunks=inflight),
+                       inflight_chunks=inflight, suspects=suspects),
             jobs=dict(active=active_jobs,
-                      submitted=snap["counters"].get("jobs_submitted", 0),
-                      completed=snap["counters"].get("jobs_completed", 0),
-                      cancelled=snap["counters"].get("jobs_cancelled", 0),
-                      interrupted=snap["counters"].get("jobs_interrupted", 0)),
+                      submitted=counters.get("jobs_submitted", 0),
+                      completed=counters.get("jobs_completed", 0),
+                      cancelled=counters.get("jobs_cancelled", 0),
+                      interrupted=counters.get("jobs_interrupted", 0),
+                      recovered=counters.get("jobs_recovered", 0)),
+            faults=dict(
+                chunks_lost=counters.get("chunks_lost", 0),
+                scenarios_redispatched=counters.get(
+                    "scenarios_redispatched", 0),
+                scenarios_poisoned=counters.get("scenarios_poisoned", 0),
+                corrupt_records=counters.get("corrupt_records", 0),
+                faults_injected=counters.get("faults_injected", 0),
+                workers_lost=pool_stats.get("workers_lost", 0),
+                worker_respawns=pool_stats.get("respawns", 0)),
             workers=pool_stats,
-            counters=snap["counters"],
+            counters=counters,
             latency=snap["latency"],
         )

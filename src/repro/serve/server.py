@@ -63,12 +63,18 @@ class SweepServer:
         trace_hashes: bool = False,
         quiet: bool = False,
         pool_factory=None,
+        poison_threshold: int = 3,
+        fault_plan=None,
+        worker_deadline_s: float | None = 300.0,
+        resume: bool = True,
     ):
         self.quiet = quiet
         self.scheduler = SweepScheduler(
             cache_dir=cache_dir, workers=workers, mode=mode, policy=policy,
             chunk_size=chunk_size, trace_hashes=trace_hashes,
             log=self._log, pool_factory=pool_factory,
+            poison_threshold=poison_threshold, fault_plan=fault_plan,
+            worker_deadline_s=worker_deadline_s, resume=resume,
         )
         self.httpd = ThreadingHTTPServer((host, port), _Handler)
         self.httpd.daemon_threads = True

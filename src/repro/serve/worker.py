@@ -38,15 +38,30 @@ def run_chunk(
     mode: str,
     policy: ExecutionPolicy | None,
     with_trace_hash: bool,
+    inject=None,
 ) -> dict:
     """Execute one chunk; returns ``{"records": [...], "hostcache": delta}``
     where the delta is this chunk's hit/miss contribution (cumulative
-    worker counters would double-count across chunks)."""
+    worker counters would double-count across chunks).
+
+    ``inject`` is an optional :class:`repro.distributed.faults.FaultAction`
+    resolved by the scheduler at dispatch time: pre-work faults (crash /
+    hang / stall / delay) fire before the chunk executes, ``corrupt``
+    mangles the finished records — so the scheduler's recovery paths are
+    exercised against the real worker protocol."""
     from repro.core.hostcache import stats_all
 
+    if inject is not None:
+        from repro.distributed import faults
+
+        faults.apply_pre(inject)
     before = stats_all()
     records = execute_chunk(scenarios, mode=mode, policy=policy,
                             with_trace_hash=with_trace_hash)
+    if inject is not None and inject.kind == "corrupt":
+        from repro.distributed import faults
+
+        records = faults.corrupt_records(records)
     after = stats_all()
     delta = {
         cache: {k: after[cache][k] - before[cache][k]

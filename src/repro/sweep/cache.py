@@ -15,6 +15,15 @@ the old complete record or the new complete record, never a mix.  Two
 writers racing on the same key are both writing the same deterministic
 content (the key pins the simulation), so last-rename-wins is safe.  A
 re-run of an interrupted sweep simply re-executes the missing hashes.
+
+Each record is stored inside a checksum envelope —
+``{"sha256": <digest of the canonical record JSON>, "record": {...}}`` —
+verified on every read.  A record that fails verification (bit rot, a torn
+write from a crashed kernel, manual tampering) is *quarantined*: renamed to
+``<hash>.json.bad`` for post-mortem and treated as a miss, so the scenario
+silently re-executes instead of serving a corrupted result or crashing the
+reader.  Pre-envelope records (a bare dict with a ``status``) stay
+readable.
 """
 from __future__ import annotations
 
@@ -60,6 +69,12 @@ def scenario_hash(s: Scenario) -> str:
     return hashlib.sha256(canonical_json(scenario_key(s)).encode()).hexdigest()
 
 
+def record_digest(record: dict) -> str:
+    """Payload checksum stored in (and verified against) the on-disk
+    envelope."""
+    return hashlib.sha256(canonical_json(record).encode()).hexdigest()
+
+
 class ResultCache:
     """Filesystem-backed content-addressed store; ``root=None`` disables it
     (every scenario executes)."""
@@ -77,12 +92,37 @@ class ResultCache:
     def get(self, h: str) -> dict | None:
         if not self.enabled:
             return None
+        path = self.path(h)
         try:
-            with open(self.path(h)) as f:
-                return json.load(f)
-        except (OSError, json.JSONDecodeError, UnicodeDecodeError):
-            # any unreadable record is a miss (re-execute), never a crash
+            with open(path) as f:
+                payload = json.load(f)
+        except FileNotFoundError:
             return None
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            # unparseable on-disk bytes (truncation, bit rot): keep the
+            # evidence aside and re-execute the scenario
+            self._quarantine(path)
+            return None
+        except OSError:
+            # transient read failure (permissions, EIO): a miss, but the
+            # file may be fine — do not destroy it
+            return None
+        if (isinstance(payload, dict) and "record" in payload
+                and "sha256" in payload):
+            if record_digest(payload["record"]) != payload["sha256"]:
+                self._quarantine(path)
+                return None
+            return payload["record"]
+        if isinstance(payload, dict) and "status" in payload:
+            return payload  # pre-envelope record: readable, unverified
+        self._quarantine(path)
+        return None
+
+    def _quarantine(self, path: str) -> None:
+        try:
+            os.replace(path, path + ".bad")
+        except OSError:
+            pass  # a concurrent reader may have quarantined it already
 
     def put(self, h: str, record: dict) -> None:
         if not self.enabled:
@@ -92,7 +132,7 @@ class ResultCache:
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(record, f)
+                json.dump(dict(sha256=record_digest(record), record=record), f)
                 f.flush()
                 # the rename must never expose a partially-flushed record,
                 # even across a crash: data reaches disk before the name

@@ -80,6 +80,14 @@ def scenario_row(scenario, record: dict, status: str | None = None) -> dict | No
     elif "error" in record or record.get("status") == "error":
         err = (record.get("error") or "").strip()
         row["error"] = err.splitlines()[-1] if err else "unknown error"
+        # retry/fault audit trail: how many attempts ran, what the final
+        # one died of, and whether the scenario was quarantined as poison
+        if "attempts" in record:
+            row["attempts"] = record["attempts"]
+        if "last_error" in record:
+            row["last_error"] = record["last_error"]
+        if record.get("poison"):
+            row["poison"] = True
     else:
         return None
     return row

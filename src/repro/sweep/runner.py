@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import multiprocessing
+import random
 import signal
 import threading
 import time
@@ -128,12 +129,16 @@ class ExecutionPolicy:
       serial runs and spawn-pool workers; elsewhere it is skipped).  A long
       C-level call delays delivery until control returns to the interpreter.
     retries: how many times a failed/timed-out scenario re-executes.
-    backoff_s: sleep before retry ``k`` is ``backoff_s * 2**k``.
+    backoff_s: base of the exponential retry backoff — see ``backoff_for``.
+    fault_plan: optional :class:`repro.distributed.faults.FaultPlan`
+      consulted per attempt at the ``"scenario"`` site (tests and the chaos
+      bench exercise the retry machinery through it; pickles to workers).
     """
 
     timeout_s: float | None = None
     retries: int = 0
     backoff_s: float = 0.25
+    fault_plan: "object | None" = None
 
     def __post_init__(self):
         if self.timeout_s is not None and self.timeout_s <= 0:
@@ -145,7 +150,17 @@ class ExecutionPolicy:
 
     @property
     def is_default(self) -> bool:
-        return self.timeout_s is None and self.retries == 0
+        return (self.timeout_s is None and self.retries == 0
+                and self.fault_plan is None)
+
+    def backoff_for(self, attempt: int, key: str = "") -> float:
+        """Sleep before retry ``attempt`` (1-based): exponential in the
+        attempt, with *deterministic* jitter in ``[0.5, 1.5)`` seeded from
+        the scenario key — retried scenarios desynchronise (no thundering
+        herd after a shared failure) yet every re-run of the same sweep
+        sleeps the same schedule, keeping runs reproducible."""
+        base = self.backoff_s * (2 ** (attempt - 1))
+        return base * (0.5 + random.Random(f"{key}:{attempt}").random())
 
 
 class ScenarioTimeout(BaseException):
@@ -189,9 +204,12 @@ def execute_scenario_policied(
     with_trace_hash: bool = False,
 ) -> dict:
     """``execute_scenario`` under an :class:`ExecutionPolicy`: best-effort
-    timeout, then bounded retry with exponential backoff.  The returned
-    record carries ``attempts`` (and ``timed_out`` when the last attempt hit
-    the timeout); like all error records it is never cached."""
+    timeout, then bounded retry with exponential, deterministically
+    jittered backoff (``ExecutionPolicy.backoff_for``).  The returned
+    record carries ``attempts`` (and on failure ``last_error``, the final
+    attempt's one-line cause, plus ``timed_out`` when that attempt hit the
+    timeout) so retried scenarios stay auditable in exported rows; like
+    all error records it is never cached."""
     if policy is None or policy.is_default:
         rec = execute_scenario(scenario, with_trace_hash=with_trace_hash)
         if policy is not None:
@@ -200,13 +218,36 @@ def execute_scenario_policied(
     rec: dict = {}
     for attempt in range(policy.retries + 1):
         if attempt:
-            time.sleep(policy.backoff_s * (2 ** (attempt - 1)))
-        rec = _execute_with_timeout(scenario, policy.timeout_s,
-                                    with_trace_hash)
+            time.sleep(policy.backoff_for(attempt,
+                                          key=scenario.scenario_id))
+        rec = _attempt_with_faults(scenario, policy, attempt,
+                                   with_trace_hash)
         rec["attempts"] = attempt + 1
         if rec["status"] == "ok":
             break
+    if rec.get("status") == "error" and rec.get("error"):
+        rec["last_error"] = rec["error"].strip().splitlines()[-1]
     return rec
+
+
+def _attempt_with_faults(scenario: Scenario, policy: ExecutionPolicy,
+                         attempt: int, with_trace_hash: bool) -> dict:
+    """One policied attempt, with the policy's fault plan (if any) consulted
+    first: ``error`` injects a synthetic failure record (driving the retry
+    path without touching the simulator); crash/hang/stall/delay apply as
+    process-level pre-work faults."""
+    if policy.fault_plan is not None:
+        from repro.distributed import faults
+
+        action = policy.fault_plan.action("scenario", index=attempt,
+                                          keys=(scenario.scenario_id,))
+        if action is not None:
+            if action.kind == "error":
+                return dict(status="error",
+                            error=f"injected fault: {action.note}",
+                            injected=True, wall_s=0.0)
+            faults.apply_pre(action)
+    return _execute_with_timeout(scenario, policy.timeout_s, with_trace_hash)
 
 
 def execute_scenarios_batch(scenarios: list[Scenario],
@@ -310,7 +351,8 @@ def execute_chunk(
             retry = dataclasses.replace(policy, retries=policy.retries - 1)
             for i, rec in enumerate(records):
                 if rec["status"] == "error":
-                    time.sleep(policy.backoff_s)
+                    time.sleep(policy.backoff_for(
+                        1, key=scenarios[i].scenario_id))
                     records[i] = execute_scenario_policied(
                         scenarios[i], retry, with_trace_hash=with_trace_hash)
                     records[i]["attempts"] += 1

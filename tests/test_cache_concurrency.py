@@ -65,3 +65,82 @@ def test_unreadable_record_is_a_miss_not_a_crash(tmp_path):
     # and a fresh put heals it
     cache.put(key, dict(status="ok", x=2))
     assert cache.get(key)["x"] == 2
+
+
+# ---- checksum envelope + quarantine (fault-tolerance satellite) -------------
+
+
+def test_truncated_record_quarantined_not_served(tmp_path):
+    from repro.sweep.cache import ResultCache
+
+    cache = ResultCache(str(tmp_path / "cache"))
+    key = "ef" * 32
+    cache.put(key, dict(status="ok", x=1, payload="p" * 4096))
+    path = cache.path(key)
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(raw[: len(raw) // 2])  # torn write / truncated by crash
+    assert cache.get(key) is None
+    # the evidence is renamed aside, not destroyed
+    assert not os.path.exists(path)
+    assert os.path.exists(path + ".bad")
+    # a fresh put heals the entry without touching the quarantined file
+    cache.put(key, dict(status="ok", x=2))
+    assert cache.get(key)["x"] == 2
+    assert os.path.exists(path + ".bad")
+
+
+def test_bitflipped_record_fails_checksum_and_quarantines(tmp_path):
+    from repro.sweep.cache import ResultCache
+
+    cache = ResultCache(str(tmp_path / "cache"))
+    key = "0a" * 32
+    cache.put(key, dict(status="ok", x=1))
+    path = cache.path(key)
+    text = open(path).read()
+    flipped = text.replace('"x": 1', '"x": 2')  # valid JSON, wrong payload
+    assert flipped != text
+    with open(path, "w") as f:
+        f.write(flipped)
+    # the envelope checksum catches silent payload corruption
+    assert cache.get(key) is None
+    assert os.path.exists(path + ".bad")
+
+
+def test_envelope_shape_and_digest_on_disk(tmp_path):
+    from repro.sweep.cache import ResultCache, record_digest
+
+    cache = ResultCache(str(tmp_path / "cache"))
+    key = "1b" * 32
+    record = dict(status="ok", report=dict(n=1), wall_s=0.5)
+    cache.put(key, record)
+    payload = json.load(open(cache.path(key)))
+    assert set(payload) == {"sha256", "record"}
+    assert payload["sha256"] == record_digest(record)
+    assert cache.get(key) == record
+
+
+def test_legacy_bare_record_still_readable(tmp_path):
+    from repro.sweep.cache import ResultCache
+
+    cache = ResultCache(str(tmp_path / "cache"))
+    key = "2c" * 32
+    path = cache.path(key)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:  # pre-envelope record, written by old code
+        json.dump(dict(status="ok", x=7), f)
+    assert cache.get(key)["x"] == 7
+    assert not os.path.exists(path + ".bad")
+
+
+def test_unrecognized_shape_quarantined(tmp_path):
+    from repro.sweep.cache import ResultCache
+
+    cache = ResultCache(str(tmp_path / "cache"))
+    key = "3d" * 32
+    path = cache.path(key)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump([1, 2, 3], f)  # parseable, but not a record at all
+    assert cache.get(key) is None
+    assert os.path.exists(path + ".bad")

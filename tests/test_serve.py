@@ -265,8 +265,10 @@ def test_scheduler_drain_persists_completed_and_resumes(tmp_path):
         sched.submit(tiny_spec())
 
     # a fresh scheduler over the same cache dir resumes from what was
-    # persisted: completed scenarios come back as cache hits
-    sched2 = scheduler(tmp_path, GatedPool(), mode="scenario")
+    # persisted: completed scenarios come back as cache hits (journal
+    # recovery off — this test pins the cache path; test_faults covers
+    # journal-driven resumption)
+    sched2 = scheduler(tmp_path, GatedPool(), mode="scenario", resume=False)
     try:
         job2 = sched2.submit(tiny_spec(accels=accels))
         events2 = collect_events(job2)
@@ -498,13 +500,13 @@ def test_server_rows_byte_identical_to_cli(tmp_path):
         json.loads((srv_out / "sweep.json").read_text())
 
 
-def spawn_server(tmp_path, cache):
+def spawn_server(tmp_path, cache, *extra_args):
     port_file = tmp_path / "port"
     env = dict(os.environ, PYTHONPATH=SRC)
     proc = subprocess.Popen(
         [sys.executable, "-m", "repro.serve", "--port", "0",
          "--port-file", str(port_file), "--cache", str(cache),
-         "--workers", "1", "--chunk-size", "1", "--quiet"],
+         "--workers", "1", "--chunk-size", "1", "--quiet", *extra_args],
         env=env, cwd=os.path.dirname(SRC),
         stdout=subprocess.PIPE, stderr=subprocess.PIPE)
     deadline = time.time() + 120
@@ -555,8 +557,11 @@ def test_sigterm_drains_and_resume_completes(tmp_path):
     rows_streamed = sum(e["type"] == "row" for e in events)
     assert rows_streamed == done_first  # completed rows reached the client
 
-    # resume: same cache, fresh server; completed work is not redone
-    proc2, address2 = spawn_server(tmp_path, cache)
+    # resume: same cache, fresh server; completed work is not redone.
+    # --no-resume pins the cache-resumption path: with journal recovery on,
+    # the restarted server would race this resubmission by re-running the
+    # interrupted job itself (that path is covered in test_faults).
+    proc2, address2 = spawn_server(tmp_path, cache, "--no-resume")
     try:
         client2 = ServeClient(address2)
         client2.wait_ready(deadline_s=60)
