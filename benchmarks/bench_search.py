@@ -1,0 +1,229 @@
+"""Adaptive-search bench: executions-to-optimum vs the full grid.
+
+The question the ``repro.sweep.search`` loop exists to answer: how much
+of a design-space grid do you actually have to simulate to find its best
+configuration?  This bench runs both sides on the same space — the
+memory-controller sensitivity matrix of ``bench_memory`` (address mapping
+x page policy x pseudo-channels across all four accelerators, on the
+synthetic tiny graph so the full grid stays cheap) — and reports:
+
+- **full-grid cost**: scenarios executed by ``run_sweep`` (the baseline
+  every paper table pays),
+- **executions-to-optimum** per seed: cumulative executions after the
+  round where the search's incumbent first lands within 5% of the true
+  grid optimum,
+- the **regret curve**: (cumulative executions, relative regret) per
+  round, averaged over seeds — the cost/quality trade the surrogate buys,
+- the **budget check**: every seed must reach the 5% band within the 25%
+  budget the search defaults to (this is the acceptance bar; the bench
+  fails otherwise).
+
+``--tiny`` is the CI smoke: a search over the 8-scenario tiny grid with
+trace fingerprints on — every probe's ``trace_hash`` must match
+``benchmarks/golden_hashes_tiny.json`` and every probe row must be
+byte-identical to the same scenario's ``run_sweep`` row (proof the
+adaptive path simulates the exact same work), then a warm re-search must
+execute nothing.
+
+    PYTHONPATH=src python -m benchmarks.bench_search          # full
+    PYTHONPATH=src python -m benchmarks.bench_search --tiny   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import tempfile
+import time
+
+from repro.configs.graphsim import MEMORY_SENSITIVITY_AXES
+from repro.graph.generators import GraphSpec
+from repro.sweep import ResultCache, run_sweep
+from repro.sweep.cache import canonical_json
+from repro.sweep.results import result_rows
+from repro.sweep.runner import scenario_hash
+from repro.sweep.search import RunnerExecutor, SearchSpec, run_search
+from repro.sweep.spec import SweepSpec
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_hashes_tiny.json")
+TINY = GraphSpec("tiny", "uniform", 256, 1024, True, 1, 0)
+
+TOLERANCE = 0.05   # "found it" = within 5% of the grid optimum
+BUDGET_FRAC = 0.25  # acceptance bar: optimum found inside a quarter grid
+
+
+def search_space() -> SweepSpec:
+    """bench_memory's controller-sensitivity matrix widened by a channel
+    axis, on the tiny graph: 4 accelerators x {1, 4, 8} HBM channels x
+    {row, bank_xor} x {open, closed} x {hbm, hbm-pc} — 64 valid points."""
+    return SweepSpec(
+        name="bench-search",
+        accelerators=("accugraph", "foregraph", "hitgraph", "thundergp"),
+        graphs=(TINY,),
+        problems=("bfs",),
+        drams=("hbm", ("hbm", 4), ("hbm", 8)),
+        **MEMORY_SENSITIVITY_AXES,
+    )
+
+
+# ---- full bench -------------------------------------------------------------
+
+
+def run_full(out: str, seeds: int) -> int:
+    spec = search_space()
+    scenarios = spec.scenarios()
+    pool = len(scenarios)
+    budget = math.ceil(BUDGET_FRAC * pool)
+    tmp = tempfile.mkdtemp(prefix="bench_search_")
+
+    print(f"[bench_search] grid: {pool} scenarios (full-grid baseline)")
+    t0 = time.time()
+    grid = run_sweep(spec, cache_dir=os.path.join(tmp, "grid"))
+    grid_wall = time.time() - t0
+    rows = [r for r in result_rows(grid, with_status=False)
+            if r.get("runtime_s") is not None]
+    assert len(rows) == pool, "grid must execute cleanly"
+    optimum = min(r["runtime_s"] for r in rows)
+    print(f"  optimum runtime_s={optimum:.6g} in {grid_wall:.1f}s")
+
+    per_seed = []
+    curves = []
+    t1 = time.time()
+    for seed in range(seeds):
+        res = run_search(
+            SearchSpec(space=spec, budget=budget, batch=3, seed=seed),
+            cache_dir=os.path.join(tmp, f"search{seed}"))
+        assert res.best is not None
+        gap = res.best["value"] / optimum - 1.0
+        to_opt = None
+        curve = []
+        for h in res.history:
+            regret = (None if h["best"] is None
+                      else round(h["best"] / optimum - 1.0, 6))
+            curve.append(dict(executed=h["executed"], regret=regret))
+            if to_opt is None and regret is not None and regret <= TOLERANCE:
+                to_opt = h["executed"]
+        per_seed.append(dict(
+            seed=seed, executed=res.executed, rounds=res.rounds,
+            best=res.best["value"], best_scenario=res.best["scenario_id"],
+            gap=round(gap, 6), executions_to_optimum=to_opt))
+        curves.append(curve)
+        print(f"  seed {seed}: best={res.best['value']:.6g} "
+              f"(gap {gap:+.2%}) after {res.executed}/{pool} executions; "
+              f"within {TOLERANCE:.0%} at {to_opt}")
+        # the acceptance bar: a quarter of the grid finds the optimum band
+        assert gap <= TOLERANCE, (
+            f"seed {seed}: search missed the optimum by {gap:.1%} "
+            f"with {res.executed} executions (budget {budget})")
+        assert res.executed <= budget <= pool * BUDGET_FRAC + 1
+    search_wall = time.time() - t1
+
+    mean_to_opt = sum(s["executions_to_optimum"] for s in per_seed) / seeds
+    result = dict(
+        mode="full",
+        space=dict(pool=pool, spec=spec.name),
+        tolerance=TOLERANCE,
+        budget=dict(frac=BUDGET_FRAC, executions=budget),
+        full_grid=dict(executions=pool, wall_s=round(grid_wall, 3),
+                       optimum=optimum),
+        seeds=seeds,
+        per_seed=per_seed,
+        mean_executions_to_optimum=round(mean_to_opt, 2),
+        cost_fraction=round(mean_to_opt / pool, 4),
+        regret_curves=curves,
+        search_wall_s=round(search_wall, 3),
+    )
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"  mean executions-to-optimum {mean_to_opt:.1f}/{pool} "
+          f"({mean_to_opt / pool:.0%} of the grid)")
+    print(f"  wrote {out}")
+    return 0
+
+
+# ---- CI smoke ---------------------------------------------------------------
+
+
+def run_tiny(out: str) -> int:
+    spec = SweepSpec(
+        name="search-tiny",
+        accelerators=("accugraph", "foregraph", "hitgraph", "thundergp"),
+        graphs=(TINY,),
+        problems=("bfs",),
+        drams=("default", "hbm"),
+    )
+    scenarios = spec.scenarios()
+    pool = len(scenarios)
+    by_hash = {scenario_hash(s): s for s in scenarios}
+    golden = json.load(open(GOLDEN))
+    tmp = tempfile.mkdtemp(prefix="bench_search_")
+    cache = ResultCache(os.path.join(tmp, "c"), memo_capacity=256)
+
+    print(f"[bench_search] tiny: exhaustive search over {pool} scenarios, "
+          f"trace fingerprints on")
+    t0 = time.time()
+    res = run_search(
+        SearchSpec(space=spec, budget=pool, batch=2, seed=0),
+        cache=cache,
+        executor=RunnerExecutor(cache, with_trace_hash=True))
+    wall = time.time() - t0
+    assert res.executed == pool and not res.errors, res.summary()
+
+    # golden trace hashes: the adaptive path simulated the exact streams
+    mismatches = {}
+    for p in res.probes:
+        sid = by_hash[p["hash"]].scenario_id
+        got = cache.get(p["hash"]).get("trace_hash")
+        if golden.get(sid) != got:
+            mismatches[sid] = (got, golden.get(sid))
+    assert not mismatches, f"probe trace hashes diverged: {mismatches}"
+    print(f"  golden: {pool}/{len(golden)} trace hashes match ({wall:.1f}s)")
+
+    # probe rows byte-identical to an independent grid sweep's rows
+    grid = run_sweep(spec, cache_dir=os.path.join(tmp, "grid"))
+    grid_rows = {scenario_hash(sr.scenario): row for sr, row in
+                 zip(grid.results, result_rows(grid, with_status=False))}
+    for p in res.probes:
+        assert canonical_json(p["row"]) == \
+            canonical_json(grid_rows[p["hash"]]), p["hash"]
+    print(f"  rows: {pool}/{pool} byte-identical to run_sweep")
+
+    # a warm re-search answers from the cache without executing
+    res2 = run_search(SearchSpec(space=spec, budget=pool, batch=2, seed=3),
+                      cache=cache)
+    assert res2.executed == 0 and res2.warm == pool, res2.summary()
+    assert res2.best["value"] == res.best["value"]
+    print("  warm re-search: 0 executions, same answer")
+
+    result = dict(
+        mode="tiny",
+        pool=pool,
+        wall_s=round(wall, 3),
+        golden_hashes_checked=pool,
+        golden_ok=True,
+        rows_byte_identical=True,
+        warm_research_zero_executions=True,
+        best=res.best["scenario_id"],
+    )
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"  wrote {out}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: golden trace hashes + row byte-identity")
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="search repetitions in full mode")
+    ap.add_argument("--out", default="BENCH_search.json")
+    args = ap.parse_args(argv)
+    if args.tiny:
+        return run_tiny(args.out)
+    return run_full(args.out, args.seeds)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,6 +23,15 @@ Rows are byte-identical to ``python -m repro.sweep`` output for the same
 spec and cache state: both paths share the runner, the cache keys, and
 :func:`repro.sweep.results.scenario_row`.
 
+Besides grid sweeps, the scheduler runs **adaptive search jobs**
+(``POST /search`` / :meth:`SweepScheduler.submit_search`): the
+:mod:`repro.sweep.search` loop proposes probe batches that dedup and
+execute through the same entry table and warm worker pool, streaming
+``proposal``/``progress``/``row`` events and finishing with a
+``search_result`` payload.  Search jobs journal with ``kind: "search"``
+and resume after a crash like sweeps do — already-executed probes come
+back from the cache, so the search continues where it left off.
+
 Partial failure is survivable at every layer: crashed/hung workers are
 detected and respawned by the supervised pool
 (:mod:`repro.distributed.workpool`), their chunks re-dispatched (with a
@@ -35,16 +44,28 @@ exercised deterministically through
 The seed's LLM-serving scaffolding (batched KV-cache engine) lives on in
 :mod:`repro.serve.legacy`.
 """
-from repro.serve.client import JobResult, ServeClient, ServeError
+from repro.serve.client import (
+    JobResult,
+    SearchJobResult,
+    ServeClient,
+    ServeError,
+)
 from repro.serve.journal import JobJournal
 from repro.serve.protocol import (
     ProtocolError,
     dump_event,
     parse_event,
+    search_from_wire,
+    search_to_wire,
     spec_from_wire,
     spec_to_wire,
 )
-from repro.serve.scheduler import TERMINAL_EVENTS, JobState, SweepScheduler
+from repro.serve.scheduler import (
+    TERMINAL_EVENTS,
+    JobState,
+    SearchJobState,
+    SweepScheduler,
+)
 from repro.serve.server import SweepServer
 
 __all__ = [
@@ -52,6 +73,8 @@ __all__ = [
     "JobResult",
     "JobState",
     "ProtocolError",
+    "SearchJobResult",
+    "SearchJobState",
     "ServeClient",
     "ServeError",
     "SweepScheduler",
@@ -59,6 +82,8 @@ __all__ = [
     "TERMINAL_EVENTS",
     "dump_event",
     "parse_event",
+    "search_from_wire",
+    "search_to_wire",
     "spec_from_wire",
     "spec_to_wire",
 ]

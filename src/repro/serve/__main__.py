@@ -13,6 +13,14 @@ Client (same axis flags as ``python -m repro.sweep``):
     PYTHONPATH=src python -m repro.serve --stats --address 127.0.0.1:8731
     PYTHONPATH=src python -m repro.serve --shutdown --address 127.0.0.1:8731
 
+``--search`` submits an *adaptive search* job instead of a grid (same
+axis flags, plus the query flags of ``python -m repro.sweep search``):
+
+    PYTHONPATH=src python -m repro.serve --search --address 127.0.0.1:8731 \
+        --accels accugraph,hitgraph --graphs sd --problems bfs,pr \
+        --drams hbm --channels 4,8 --page-policies open,closed \
+        --objective runtime_s --budget-frac 0.25 --out results/served
+
 ``--port 0`` picks a free port; ``--port-file`` writes the bound
 ``host:port`` for whoever spawned the server (the bench harness and CI
 use this for discovery).
@@ -21,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 from repro.serve.client import ServeClient, ServeError
@@ -32,6 +41,11 @@ from repro.sweep.__main__ import (
     build_spec,
 )
 from repro.sweep.results import write_csv, write_json
+from repro.sweep.search.cli import (
+    _print_answer,
+    add_search_args,
+    build_search_spec,
+)
 
 
 def _load_faults(arg: str):
@@ -107,12 +121,52 @@ def _submit(args: argparse.Namespace) -> int:
     return 1 if result.n_errors else 0
 
 
+def _search(args: argparse.Namespace) -> int:
+    try:
+        space = build_spec(args)
+        sspec = build_search_spec(args, space)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    client = ServeClient(args.address)
+    try:
+        result = client.run_search(sspec)
+    except (OSError, ServeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    rows = result.rows_with_status()
+    if rows:
+        csv_path = f"{args.out}/{space.name}_probes.csv"
+        write_csv(csv_path, rows)
+        print(f"wrote {csv_path} ({len(rows)} probe rows)")
+    if result.result is not None:
+        os.makedirs(args.out, exist_ok=True)
+        report = f"{args.out}/{space.name}_search.json"
+        with open(report, "w") as f:
+            json.dump(result.result, f, indent=2, sort_keys=True)
+        print(f"wrote {report}")
+        _print_answer(result.result)
+        r = result.result
+        print(f"{result.job_id}: {result.outcome}; {r['executed']} executed "
+              f"(+{r['cached']} cached, +{r['warm']} warm) of {r['pool']} "
+              f"candidates in {len(result.proposals)} rounds")
+    else:
+        print(f"{result.job_id}: {result.outcome}; no search result "
+              f"({result.error or 'stream ended early'})")
+    if result.outcome != "done" or result.result is None:
+        return 3
+    return 1 if result.error else 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.serve",
                                  description=__doc__)
     mode = ap.add_mutually_exclusive_group()
     mode.add_argument("--submit", action="store_true",
                       help="act as a client: submit a sweep to --address")
+    mode.add_argument("--search", action="store_true",
+                      help="act as a client: submit an adaptive search "
+                           "job to --address")
     mode.add_argument("--stats", action="store_true",
                       help="print the server's /stats snapshot")
     mode.add_argument("--shutdown", action="store_true",
@@ -154,8 +208,9 @@ def main(argv: list[str] | None = None) -> int:
     add_policy_args(ap)
     # client knobs
     ap.add_argument("--out", default="results/served",
-                    help="(--submit) output directory")
+                    help="(--submit/--search) output directory")
     add_spec_args(ap)
+    add_search_args(ap)
     args = ap.parse_args(argv)
 
     if args.stats:
@@ -175,6 +230,8 @@ def main(argv: list[str] | None = None) -> int:
         return 0
     if args.submit:
         return _submit(args)
+    if args.search:
+        return _search(args)
     return _serve(args)
 
 

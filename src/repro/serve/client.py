@@ -20,8 +20,14 @@ import http.client
 import json
 import time
 
-from repro.serve.protocol import ProtocolError, parse_event, spec_to_wire
+from repro.serve.protocol import (
+    ProtocolError,
+    parse_event,
+    search_to_wire,
+    spec_to_wire,
+)
 from repro.serve.scheduler import TERMINAL_EVENTS
+from repro.sweep.search.loop import SearchSpec
 from repro.sweep.spec import SweepSpec
 
 
@@ -71,6 +77,27 @@ class JobResult:
         """Error rows from the scheduler's poison circuit breaker (the
         scenario repeatedly killed its workers and was quarantined)."""
         return sum(bool(e.get("poison")) for e in self.row_events)
+
+
+class SearchJobResult(JobResult):
+    """A collected search-job stream: sweep-shaped rows for every probe,
+    plus the search's answer (``result``, the
+    :meth:`repro.sweep.search.SearchResult.to_dict` payload) and the
+    per-round ``proposals`` (lists of scenario hashes)."""
+
+    def __init__(self, job_id: str, total: int, skipped: list,
+                 events: list[dict], outcome: str):
+        super().__init__(job_id, total, skipped, events, outcome)
+        self.result: dict | None = None
+        self.proposals: list[list[str]] = []
+        self.error: str | None = None
+        for ev in events:
+            if ev["type"] == "search_result":
+                self.result = ev["result"]
+            elif ev["type"] == "proposal":
+                self.proposals.append(ev["hashes"])
+            elif ev["type"] == "search_error":
+                self.error = ev["error"]
 
 
 class ServeClient:
@@ -132,9 +159,17 @@ class ServeClient:
     def submit(self, spec: SweepSpec):
         """Submit and yield events as they stream.  The generator's first
         event is the ``job`` header; it ends after a terminal event."""
+        return self._post_stream("/submit", dict(spec=spec_to_wire(spec)))
+
+    def submit_search(self, sspec: SearchSpec):
+        """Submit an adaptive search and yield its events as they stream
+        (``proposal`` / ``progress`` / ``row`` / ``search_result`` /
+        terminal; see :mod:`repro.serve.protocol`)."""
+        return self._post_stream("/search", dict(search=search_to_wire(sspec)))
+
+    def _post_stream(self, path: str, body: dict):
         conn = self._connect()
-        conn.request("POST", "/submit",
-                     body=json.dumps(dict(spec=spec_to_wire(spec))).encode(),
+        conn.request("POST", path, body=json.dumps(body).encode(),
                      headers={"Content-Type": "application/json"})
         resp = conn.getresponse()
         if resp.status >= 400:
@@ -164,16 +199,29 @@ class ServeClient:
         """Submit, stream to completion, reassemble rows in expansion
         order.  ``interrupted`` streams (server drained mid-job) return
         what completed — resubmitting resumes from the cache."""
+        return self._collect(self.submit(spec), JobResult)
+
+    def run_search(self, sspec: SearchSpec) -> SearchJobResult:
+        """Submit an adaptive search, stream to completion.  The returned
+        :class:`SearchJobResult` carries the probes' sweep-shaped rows
+        and the search's answer dict; an ``interrupted`` stream (server
+        drained) returns what ran — resubmitting warm-starts from the
+        cache and continues the exploration."""
+        return self._collect(self.submit_search(sspec), SearchJobResult)
+
+    def _collect(self, stream, result_cls):
         events = []
         job_id, total, skipped = "", 0, []
         outcome = "disconnected"
-        for ev in self.submit(spec):
+        for ev in stream:
             events.append(ev)
             if ev["type"] == "job":
                 job_id, total = ev["job_id"], ev["total"]
                 skipped = ev.get("skipped", [])
             elif ev["type"] in TERMINAL_EVENTS:
                 outcome = ev["type"]
+                if ev["type"] == "done":
+                    total = ev.get("total", total)  # searches grow total
         if not job_id:
             raise ProtocolError("stream ended before the job header")
-        return JobResult(job_id, total, skipped, events, outcome)
+        return result_cls(job_id, total, skipped, events, outcome)

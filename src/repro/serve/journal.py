@@ -6,7 +6,8 @@ delivered.  What a crashed or SIGKILLed server *loses* is the list of
 jobs it had accepted but not finished.  The journal records exactly
 that, as an append-only JSONL file under the cache dir:
 
-    {"op": "job", "id": "job-3", "name": "…", "spec": {…wire spec…}, "ts": …}
+    {"op": "job", "id": "job-3", "name": "…", "kind": "sweep|search",
+     "spec": {…wire spec…}, "ts": …}
     {"op": "end", "id": "job-3", "outcome": "done"}
 
 A ``job`` op is fsynced before the submission is acknowledged; an
@@ -40,10 +41,14 @@ class JobJournal:
 
     # ---- append side -------------------------------------------------------
 
-    def record_job(self, job_id: str, name: str, spec_wire: dict) -> None:
-        """Durably record an accepted job (fsync before returning)."""
-        self._append(dict(op="job", id=job_id, name=name, spec=spec_wire,
-                          ts=time.time()))
+    def record_job(self, job_id: str, name: str, spec_wire: dict,
+                   kind: str = "sweep") -> None:
+        """Durably record an accepted job (fsync before returning).
+        ``kind`` distinguishes grid sweeps from adaptive searches so
+        recovery resubmits each through the right path; journals written
+        before the field existed replay as sweeps."""
+        self._append(dict(op="job", id=job_id, name=name, kind=kind,
+                          spec=spec_wire, ts=time.time()))
 
     def record_end(self, job_id: str, outcome: str) -> None:
         """Record a terminal outcome.  Only ``done`` and ``cancelled`` close

@@ -26,6 +26,15 @@ two-element lists, address mappings serialize to their ``label`` token
 (``scheme`` / ``scheme@lines``), and config overrides to their field dict.
 ``spec_from_wire(spec_to_wire(s))`` expands to hash-identical scenarios —
 the server caches under the same content addresses as the CLI.
+
+A *search* submission (``POST /search``, body ``{"search": <wire>}``)
+wraps a wire spec as the candidate ``space`` plus the query fields of
+:class:`repro.sweep.search.SearchSpec`; its stream adds three event
+types to the sweep vocabulary — ``proposal`` (the hashes one search
+round decided to probe), ``progress`` (loop narration), and
+``search_result`` (the full :class:`~repro.sweep.search.SearchResult`
+dict, right before ``done``).  ``row`` events are unchanged: probes are
+ordinary scheduler deliveries, byte-identical to grid-sweep rows.
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ import json
 
 from repro.core.dram import AddressMapping
 from repro.graph.generators import GraphSpec
+from repro.sweep.search.loop import SearchSpec
 from repro.sweep.spec import ConfigOverride, SweepSpec
 
 
@@ -112,6 +122,38 @@ def spec_from_wire(d: dict) -> SweepSpec:
                          graphs=kw.pop("graphs", ()), **kw)
     except TypeError as e:
         raise ProtocolError(f"bad spec: {e}")
+
+
+_SEARCH_FIELDS = ("objective", "direction", "mode", "rank_over", "budget",
+                  "budget_frac", "batch", "init", "surrogate", "acquisition",
+                  "epsilon", "seed", "max_pool", "patience")
+
+
+def search_to_wire(sspec: SearchSpec) -> dict:
+    wire = dict(space=spec_to_wire(sspec.space),
+                group_by=list(sspec.group_by))
+    for f in _SEARCH_FIELDS:
+        wire[f] = getattr(sspec, f)
+    return wire
+
+
+def search_from_wire(d: dict) -> SearchSpec:
+    if not isinstance(d, dict) or "space" not in d:
+        raise ProtocolError("search must be an object with a 'space' spec")
+    known = set(_SEARCH_FIELDS) | {"space", "group_by"}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ProtocolError(f"unknown search field(s): {', '.join(unknown)}")
+    kw: dict = dict(space=spec_from_wire(d["space"]))
+    if "group_by" in d:
+        kw["group_by"] = tuple(d["group_by"])
+    for f in _SEARCH_FIELDS:
+        if f in d:
+            kw[f] = d[f]
+    try:
+        return SearchSpec(**kw)
+    except (TypeError, ValueError) as e:
+        raise ProtocolError(f"bad search: {e}")
 
 
 def dump_event(event: dict) -> bytes:

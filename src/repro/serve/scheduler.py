@@ -23,6 +23,16 @@ dispatching, let running chunks finish (their rows are cached and
 delivered), cancel what never started, and mark still-open jobs
 interrupted — a re-submission resumes from the cache.
 
+Besides grid sweeps, the scheduler accepts **adaptive search jobs**
+(:meth:`SweepScheduler.submit_search`): the
+:mod:`repro.sweep.search` loop runs on a per-job thread and funnels each
+proposal round through the same entry table — probes dedup against the
+cache and against in-flight sweep scenarios, execute on the warm worker
+pool, and inherit every fault-tolerance layer below.  Search jobs
+journal like sweeps (``kind: "search"``); an interrupted search resumes
+from round zero on restart, with all previously executed probes coming
+back as cache hits.
+
 Fault tolerance (three layers, each independent):
 
 - **Lost chunks re-dispatch.**  The supervised pool fails a dead worker's
@@ -59,13 +69,16 @@ from collections import Counter, deque
 from concurrent.futures import CancelledError
 from typing import Callable
 
+from concurrent.futures import Future
+
 from repro.distributed.workpool import WorkerLost, WorkerPool
 from repro.serve import worker as worker_mod
 from repro.serve.journal import JobJournal
 from repro.serve.metrics import Metrics
-from repro.sweep.cache import ResultCache
+from repro.sweep.cache import ResultCache, scenario_hash
 from repro.sweep.results import scenario_row
 from repro.sweep.runner import ExecutionPolicy, plan_scenarios
+from repro.sweep.search.loop import SearchAborted, SearchSpec, run_search
 from repro.sweep.spec import Scenario, SweepSpec
 
 TERMINAL_EVENTS = ("done", "cancelled", "interrupted")
@@ -73,6 +86,9 @@ TERMINAL_EVENTS = ("done", "cancelled", "interrupted")
 
 class JobState:
     """One submitted sweep: its scenarios, progress, and event stream."""
+
+    kind = "sweep"
+    auto_finish = True  # finish when done == total (searches finish themselves)
 
     def __init__(self, job_id: str, spec: SweepSpec,
                  scenarios: list[Scenario], hashes: list[str], skipped: list):
@@ -93,9 +109,14 @@ class JobState:
     def emit(self, event: dict) -> None:
         self.events.put(event)
 
+    def _delivered(self, index: int, record: dict, status: str) -> None:
+        """Hook: a row for scenario ``index`` was just delivered (lock
+        held).  Search jobs resolve their probe futures here."""
+
     def status(self) -> dict:
         return dict(
             job_id=self.id,
+            kind=self.kind,
             name=self.name,
             total=self.total,
             done=self.done,
@@ -124,6 +145,42 @@ class _Entry:
         self.t_queued = time.time()
         self.attempts = 0
         self.suspect = False
+
+
+class SearchJobState(JobState):
+    """One adaptive search riding the scheduler: its scenario list grows
+    round by round as the search loop proposes probes, each probe is an
+    ordinary scheduler delivery (cache hit / in-flight join / dispatch),
+    and the loop's answer lands in ``result``.  ``abort()`` — called on
+    cancel and drain, lock held — unblocks the loop thread by failing
+    every pending probe future with :class:`SearchAborted`."""
+
+    kind = "search"
+    auto_finish = False  # the search thread decides when the job is done
+
+    def __init__(self, job_id: str, sspec: SearchSpec):
+        super().__init__(job_id, sspec.space, [], [], [])
+        self.sspec = sspec
+        self.total = 0  # grows with each proposal round
+        self.result = None  # SearchResult once the loop returns
+        self.aborted = False
+        self._futures: dict[int, Future] = {}
+
+    def _delivered(self, index: int, record: dict, status: str) -> None:
+        fut = self._futures.pop(index, None)
+        if fut is not None:
+            fut.set_result((record, status))
+
+    def abort(self) -> None:
+        self.aborted = True
+        for fut in self._futures.values():
+            fut.set_exception(SearchAborted("search job aborted"))
+        self._futures.clear()
+
+    def status(self) -> dict:
+        st = super().status()
+        st["have_result"] = self.result is not None
+        return st
 
 
 class SweepScheduler:
@@ -271,6 +328,14 @@ class SweepScheduler:
         self._ids = itertools.count(top + 1)  # never reuse a recovered id
         for op in open_ops:
             try:
+                if op.get("kind", "sweep") == "search":
+                    from repro.serve.protocol import search_from_wire
+                    # the search replays from round zero under its original
+                    # id — every probe the dead server executed is a cache
+                    # hit, so only the genuinely unexplored tail runs
+                    self.submit_search(search_from_wire(op["spec"]),
+                                       job_id=op["id"], recovered=True)
+                    continue
                 spec = spec_from_wire(op["spec"])
                 self._submit_internal(spec, job_id=op["id"], recovered=True)
             except Exception as e:
@@ -278,6 +343,143 @@ class SweepScheduler:
                 if self.journal is not None:
                     self.journal.record_end(op["id"], "unrecoverable")
         self.log("recovered", jobs=len(open_ops))
+
+    # ---- search jobs -------------------------------------------------------
+
+    def submit_search(self, sspec: SearchSpec,
+                      job_id: str | None = None,
+                      recovered: bool = False) -> SearchJobState:
+        """Accept an adaptive search job.  The search loop runs on its own
+        thread; each proposal round lands in the scheduler as ordinary
+        scenario entries (cache hit, in-flight join with concurrent sweeps,
+        dispatch over the warm worker pool), so probes cost and cache
+        exactly what a grid submission of the same scenarios would."""
+        with self._lock:
+            if self._draining or self._closed:
+                raise RuntimeError("server is draining; not accepting jobs")
+            job = SearchJobState(job_id or f"job-{next(self._ids):06d}",
+                                 sspec)
+            job.recovered = recovered
+            if self.journal is not None and not recovered:
+                from repro.serve.protocol import search_to_wire
+                self.journal.record_job(job.id, job.name,
+                                        search_to_wire(sspec), kind="search")
+            self._jobs[job.id] = job
+            self._job_order.append(job.id)
+            self._prune_jobs()
+            self.metrics.inc("searches_submitted")
+            if recovered:
+                self.metrics.inc("jobs_recovered")
+            job.emit(dict(type="job", job_id=job.id, name=job.name,
+                          kind="search", mode=sspec.mode, total=0,
+                          skipped=[]))
+        threading.Thread(target=self._run_search_job, args=(job,),
+                         name=f"search-{job.id}", daemon=True).start()
+        self.log("search_submitted", job=job.id, name=job.name,
+                 mode=sspec.mode, recovered=recovered)
+        return job
+
+    def _run_search_job(self, job: SearchJobState) -> None:
+        """Search-thread body: drive the loop, then finish the job."""
+        try:
+            result = run_search(
+                job.sspec,
+                cache=self.cache,
+                executor=lambda scens: self._search_execute(job, scens),
+                progress=lambda msg: job.emit(dict(
+                    type="progress", job_id=job.id, message=msg)),
+                on_proposal=lambda rnd, hashes: job.emit(dict(
+                    type="proposal", job_id=job.id, round=rnd,
+                    hashes=hashes)),
+            )
+        except SearchAborted:
+            return  # cancel/drain already emitted the terminal event
+        except Exception as e:
+            with self._wake:
+                if job.finished or job.cancelled:
+                    return
+                job.finished = True
+                self.metrics.inc("searches_failed")
+                if self.journal is not None:
+                    try:
+                        self.journal.record_end(job.id, "done")
+                    except OSError:
+                        pass
+                job.emit(dict(type="search_error", job_id=job.id,
+                              error=repr(e)))
+                job.emit(dict(type="done", job_id=job.id, total=job.total,
+                              cached=job.counts["cached"],
+                              ok=job.counts["ok"],
+                              errors=job.counts["error"] + 1))
+            self.log("search_failed", job=job.id, error=repr(e))
+            return
+        with self._wake:
+            if job.finished or job.cancelled:
+                return
+            job.result = result
+            job.finished = True
+            self.metrics.inc("searches_completed")
+            if self.journal is not None:
+                try:
+                    self.journal.record_end(job.id, "done")
+                except OSError:
+                    pass
+            job.emit(dict(type="search_result", job_id=job.id,
+                          result=result.to_dict()))
+            job.emit(dict(type="done", job_id=job.id, total=job.total,
+                          cached=job.counts["cached"], ok=job.counts["ok"],
+                          errors=job.counts["error"]))
+        self.log("search_done", job=job.id, executed=result.executed,
+                 cached=result.cached, warm=result.warm, pool=result.pool)
+
+    def _search_execute(self, job: SearchJobState,
+                        scenarios: list[Scenario]) -> list[tuple[dict, str]]:
+        """The search loop's executor: register one proposal round as
+        scheduler entries and block until every probe's record arrives.
+        Runs on the search thread; raises :class:`SearchAborted` when the
+        job is cancelled or the scheduler drains."""
+        hashes = [scenario_hash(s) for s in scenarios]
+        futures: list[Future | None] = [None] * len(scenarios)
+        out: list[tuple[dict, str] | None] = [None] * len(scenarios)
+        with self._wake:
+            if job.cancelled or job.aborted or self._draining or self._closed:
+                raise SearchAborted("scheduler unavailable")
+            base = job.total
+            job.scenarios.extend(scenarios)
+            job.hashes.extend(hashes)
+            job.total = len(job.scenarios)
+            scheduled = 0
+            for k, (h, s) in enumerate(zip(hashes, scenarios)):
+                idx = base + k
+                rec = self.cache.get(h)
+                if rec is not None and rec.get("status") == "ok":
+                    # finished (by a concurrent job) since the proposal was
+                    # scored: deliver straight from the cache
+                    self.metrics.inc("cache_hits")
+                    out[k] = (rec, "cached")
+                    self._deliver(job, idx, rec, "cached")
+                    continue
+                fut: Future = Future()
+                job._futures[idx] = fut
+                futures[k] = fut
+                entry = self._entries.get(h)
+                if entry is None:
+                    entry = self._entries[h] = _Entry(s)
+                    self._queue.append(h)
+                    scheduled += 1
+                    self.metrics.inc("scenarios_scheduled")
+                else:
+                    self.metrics.inc("inflight_joins")
+                entry.subscribers.append((job, idx))
+            if scheduled:
+                self._wake.notify_all()
+        for k, fut in enumerate(futures):
+            if fut is None:
+                continue
+            out[k] = fut.result()  # SearchAborted propagates from abort()
+        if job.cancelled or job.aborted:
+            raise SearchAborted("search job aborted")
+        return out  # type: ignore[return-value]
 
     def _prune_jobs(self) -> None:
         while len(self._job_order) > self.history:
@@ -307,7 +509,8 @@ class SweepScheduler:
         job.emit(event)
         self.metrics.inc("rows_streamed")
         self.metrics.observe("row_s", time.time() - job.t_submit)
-        if job.done >= job.total:
+        job._delivered(index, record, status)
+        if job.auto_finish and job.done >= job.total:
             self._finish_job(job)
 
     def _finish_job(self, job: JobState) -> None:
@@ -528,6 +731,8 @@ class SweepScheduler:
                 if not entry.subscribers and entry.status == "queued":
                     del self._entries[h]  # dispatcher skips its stale hash
                     self.metrics.inc("scenarios_cancelled")
+            if isinstance(job, SearchJobState):
+                job.abort()  # unblock the search thread's pending probes
             job.emit(dict(type="cancelled", job_id=job.id, done=job.done,
                           total=job.total))
         self.log("job_cancelled", job=job_id)
@@ -561,6 +766,11 @@ class SweepScheduler:
                 if not job.finished and not job.cancelled:
                     self.metrics.inc("jobs_interrupted")
                     job.finished = True
+                    if isinstance(job, SearchJobState):
+                        # unblock the loop thread; no terminal journal op,
+                        # so a restarted server resumes the search (probes
+                        # done so far are cache hits)
+                        job.abort()
                     job.emit(dict(type="interrupted", job_id=job.id,
                                   completed=job.done, total=job.total))
             self._closed = True
@@ -570,6 +780,9 @@ class SweepScheduler:
         """Hard stop (tests): no drain semantics, just tear down."""
         with self._wake:
             self._closed = True
+            for job in self._jobs.values():
+                if isinstance(job, SearchJobState) and not job.finished:
+                    job.abort()  # never leave a loop thread blocked
             self._wake.notify_all()
         self._dispatcher.join(timeout=5.0)
         self.pool.shutdown(wait=False, cancel_pending=True)

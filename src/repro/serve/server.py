@@ -7,6 +7,11 @@ Endpoints (all local-loopback by default):
   :mod:`repro.serve.protocol`).  The connection IS the subscription: a
   client that disconnects mid-stream cancels its job (results computed so
   far stay cached for everyone else).
+- ``POST /search`` — body ``{"search": <wire search>}``; same streaming
+  contract, but the job is an adaptive search
+  (:mod:`repro.sweep.search`): the stream carries ``proposal`` /
+  ``progress`` / ``row`` events as the loop explores, then a
+  ``search_result`` event with the answer before ``done``.
 - ``GET /stats`` — scheduler metrics snapshot (queue depth, cache-hit /
   in-flight-join / dedup counters, per-stage latency, worker utilization).
 - ``GET /jobs/<id>`` — one job's progress snapshot.
@@ -34,6 +39,7 @@ from repro.core.engine import ENGINE_VERSION
 from repro.serve.protocol import (
     ProtocolError,
     dump_event,
+    search_from_wire,
     spec_from_wire,
 )
 from repro.serve.scheduler import TERMINAL_EVENTS, SweepScheduler
@@ -206,6 +212,8 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if self.path == "/submit":
                 self._submit()
+            elif self.path == "/search":
+                self._search()
             elif self.path.startswith("/jobs/") and self.path.endswith("/cancel"):
                 job_id = self.path[len("/jobs/"):-len("/cancel")]
                 ok = self.app.scheduler.cancel(job_id)
@@ -233,7 +241,24 @@ class _Handler(BaseHTTPRequestHandler):
         except RuntimeError as e:  # draining
             self._json(503, dict(error=str(e)))
             return
+        self._stream_job(job)
 
+    def _search(self) -> None:
+        body = self._read_body()
+        if "search" not in body:
+            raise ProtocolError("search body needs a 'search' field")
+        sspec = search_from_wire(body["search"])
+        try:
+            job = self.app.scheduler.submit_search(sspec)
+        except ValueError as e:
+            self._json(400, dict(error=str(e)))
+            return
+        except RuntimeError as e:  # draining
+            self._json(503, dict(error=str(e)))
+            return
+        self._stream_job(job)
+
+    def _stream_job(self, job) -> None:
         self.send_response(200)
         self.send_header("Content-Type", "application/x-ndjson")
         self.send_header("Transfer-Encoding", "chunked")

@@ -12,9 +12,12 @@ is the sweep engine on top of the accelerator models:
 - :mod:`repro.sweep.runner` — cache-aware serial/parallel executor with
   per-scenario failure isolation and resume-after-interrupt,
 - :mod:`repro.sweep.results` — deterministic row aggregation, CSV/JSON
-  export, rank/Spearman validation helpers.
+  export, rank/Spearman validation helpers,
+- :mod:`repro.sweep.search` — adaptive (surrogate-driven) search that
+  answers sweep queries by executing a budgeted fraction of the grid.
 
 CLI: ``python -m repro.sweep --accels accugraph,hitgraph --graphs sd --problems bfs``
+(and ``python -m repro.sweep search ...`` for adaptive search).
 """
 from repro.sweep.cache import ResultCache, scenario_hash, scenario_key
 from repro.sweep.results import (
@@ -37,15 +40,26 @@ from repro.sweep.runner import (
     plan_scenarios,
     run_sweep,
 )
+from repro.sweep.search import (
+    RunnerExecutor,
+    SearchAborted,
+    SearchResult,
+    SearchSpec,
+    run_search,
+)
 from repro.sweep.spec import ConfigOverride, Scenario, Skipped, SweepSpec
 
 __all__ = [
     "ConfigOverride",
     "ExecutionPolicy",
     "ResultCache",
+    "RunnerExecutor",
     "Scenario",
     "ScenarioPlan",
     "ScenarioResult",
+    "SearchAborted",
+    "SearchResult",
+    "SearchSpec",
     "Skipped",
     "SweepResult",
     "SweepSpec",

@@ -15,6 +15,11 @@ before partitioning and power-of-two partition-granularity scaling —
 combinations a model rejects, e.g. ForeGraph past its 65,536-vertex
 interval cap, are likewise filtered); ``--list`` prints the expanded
 scenarios (and what was filtered out) without simulating anything.
+
+``python -m repro.sweep search`` takes the same axis flags but runs an
+*adaptive search* over the expanded space — executing only a budgeted
+fraction of it — instead of the full grid (see
+:mod:`repro.sweep.search.cli`).
 """
 from __future__ import annotations
 
@@ -137,6 +142,11 @@ def build_policy(args: argparse.Namespace) -> ExecutionPolicy | None:
 
 
 def main(argv: list[str] | None = None) -> int:
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "search":
+        from repro.sweep.search.cli import main as search_main
+        return search_main(argv[1:])
     ap = argparse.ArgumentParser(prog="python -m repro.sweep", description=__doc__)
     add_spec_args(ap)
     add_policy_args(ap)

@@ -77,10 +77,21 @@ def record_digest(record: dict) -> str:
 
 class ResultCache:
     """Filesystem-backed content-addressed store; ``root=None`` disables it
-    (every scenario executes)."""
+    (every scenario executes).
 
-    def __init__(self, root: str | None):
+    ``memo_capacity > 0`` adds a bounded in-memory index of verified
+    records: content addresses are immutable (the hash pins the record's
+    content), so a record read once never needs re-reading for the
+    process's lifetime.  Long-lived readers — the search loop probing the
+    same candidate pool round after round, the serve scheduler — enable
+    it; the default (0) keeps every read on-disk, so tests that delete
+    cache files behind the object's back see exactly the old behaviour.
+    """
+
+    def __init__(self, root: str | None, memo_capacity: int = 0):
         self.root = root
+        self.memo_capacity = memo_capacity
+        self._memo: dict[str, dict] = {}
 
     @property
     def enabled(self) -> bool:
@@ -89,9 +100,27 @@ class ResultCache:
     def path(self, h: str) -> str:
         return os.path.join(self.root, h[:2], h + ".json")
 
+    def _memoize(self, h: str, record: dict) -> None:
+        if not self.memo_capacity:
+            return
+        while len(self._memo) >= self.memo_capacity:
+            self._memo.pop(next(iter(self._memo)))  # FIFO eviction
+        self._memo[h] = record
+
     def get(self, h: str) -> dict | None:
         if not self.enabled:
             return None
+        hit = self._memo.get(h)
+        if hit is not None:
+            return hit
+        rec = self._read(h)
+        if rec is not None:
+            self._memoize(h, rec)
+        return rec
+
+    def _read(self, h: str) -> dict | None:
+        """One on-disk lookup with full verification semantics: checksum
+        quarantine, unreadable-is-a-miss."""
         path = self.path(h)
         try:
             with open(path) as f:
@@ -124,6 +153,43 @@ class ResultCache:
         except OSError:
             pass  # a concurrent reader may have quarantined it already
 
+    def lookup_many(self, hashes) -> dict[str, dict]:
+        """Bulk probe: the records present for ``hashes``, keyed by hash.
+
+        One ``scandir`` pass per touched prefix directory replaces the
+        per-hash open-and-fail syscall storm — a search round (or a large
+        grid resume) probing N mostly-missing addresses pays O(populated
+        prefixes) directory reads instead of O(N) stat/opens.  Hashes whose
+        file exists go through :meth:`get`, so single-lookup semantics
+        (checksum quarantine, unreadable-is-a-miss, memoization) are
+        byte-identical; a record landing between the directory pass and
+        this call is simply next round's hit.
+        """
+        out: dict[str, dict] = {}
+        if not self.enabled:
+            return out
+        todo: dict[str, list[str]] = {}
+        for h in hashes:
+            if h in out:
+                continue
+            hit = self._memo.get(h)
+            if hit is not None:
+                out[h] = hit
+            else:
+                todo.setdefault(h[:2], []).append(h)
+        for prefix, hs in todo.items():
+            try:
+                with os.scandir(os.path.join(self.root, prefix)) as it:
+                    present = {e.name for e in it}
+            except OSError:
+                continue  # unpopulated (or unreadable) prefix: all misses
+            for h in hs:
+                if h + ".json" in present:
+                    rec = self.get(h)
+                    if rec is not None:
+                        out[h] = rec
+        return out
+
     def put(self, h: str, record: dict) -> None:
         if not self.enabled:
             return
@@ -138,6 +204,7 @@ class ResultCache:
                 # even across a crash: data reaches disk before the name
                 os.fsync(f.fileno())
             os.replace(tmp, path)
+            self._memoize(h, record)
         except BaseException:
             if os.path.exists(tmp):
                 os.unlink(tmp)

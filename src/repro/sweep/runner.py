@@ -392,10 +392,11 @@ class ScenarioPlan:
 def plan_scenarios(scenarios: list[Scenario],
                    cache: ResultCache) -> ScenarioPlan:
     hashes = [scenario_hash(s) for s in scenarios]
+    found = cache.lookup_many(hashes)  # one directory pass, not N opens
     cached: list[tuple[int, dict]] = []
     pending_by_hash: dict[str, list[int]] = {}
     for i, h in enumerate(hashes):
-        rec = cache.get(h)
+        rec = found.get(h)
         if rec is not None and rec.get("status") == "ok":
             cached.append((i, rec))
         else:

@@ -8,6 +8,16 @@ weight support, multi-channel DRAM on a single-channel design, an interval
 size the model rejects) are filtered into :class:`Skipped` records instead of
 crashing mid-sweep.
 
+Expansion is *indexable*: the cross-product is a mixed-radix space of
+``n_points`` raw points (``axis_shape`` gives the per-axis radices in
+nesting order), and ``point_at(i)`` decodes any single point into its
+:class:`Scenario` — or the :class:`Skipped` record explaining why the
+combination is invalid — without touching any other point.  ``expand()``
+is a plain traversal of ``iter_points()``, so grid sweeps keep their
+historical, byte-identical ordering while samplers (``repro.sweep.search``)
+can draw candidate pools of 10^4-10^5 combinations without materializing
+the full list.
+
 Scenarios are frozen, hashable and picklable: they are the unit of work of
 ``repro.sweep.runner`` and the input of the content-addressed result cache
 (``repro.sweep.cache``).
@@ -15,6 +25,8 @@ Scenarios are frozen, hashable and picklable: they are the unit of work of
 from __future__ import annotations
 
 import dataclasses
+import math
+from typing import Iterator
 
 from repro.configs.graphsim import default_config
 from repro.core import semexec
@@ -209,103 +221,137 @@ class SweepSpec:
             validate_interval_scale(scale)
         check("engine(s)", self.engines, semexec.ENGINES)
 
-    def _memory_axes(self):
-        """The resolved (mapping, page_policy, pseudo_channels) cross
-        product, in spec order."""
-        return [
-            (_as_mapping(m), pp, pc)
-            for m in self.mappings
-            for pp in self.page_policies
-            for pc in self.pseudo_channels
-        ]
+    def _ensure_valid(self) -> None:
+        """Validate once per instance (the spec is frozen, so the outcome
+        cannot change); indexed accessors call this on every lookup."""
+        if not getattr(self, "_axes_valid", False):
+            self._validate()
+            object.__setattr__(self, "_axes_valid", True)
+
+    # ---- indexable expansion ----------------------------------------------
+    #
+    # The cross-product is a mixed-radix number system over the axes in
+    # their historical nesting order; point i decodes to one axis-coordinate
+    # tuple, and every point is independent of every other.
+
+    @property
+    def axis_shape(self) -> tuple[int, ...]:
+        """Per-axis radices in nesting order: graphs, accelerators,
+        problems, drams, mappings, page_policies, pseudo_channels,
+        overrides, reorders, interval_scales, engines."""
+        return (len(self.graphs), len(self.accelerators), len(self.problems),
+                len(self.drams), len(self.mappings), len(self.page_policies),
+                len(self.pseudo_channels), len(self.overrides),
+                len(self.reorders), len(self.interval_scales),
+                len(self.engines))
+
+    @property
+    def n_points(self) -> int:
+        """Raw cross-product size (valid scenarios + filtered combos)."""
+        return math.prod(self.axis_shape)
+
+    def point_at(self, i: int) -> Scenario | Skipped:
+        """Decode raw point ``i`` into its :class:`Scenario`, or the
+        :class:`Skipped` record explaining why the combination is filtered.
+        O(1) in the grid size — nothing else is expanded."""
+        self._ensure_valid()
+        shape = self.axis_shape
+        if not 0 <= i < math.prod(shape):
+            raise IndexError(f"point {i} out of range [0, {math.prod(shape)})")
+        coords = []
+        for radix in reversed(shape):
+            i, c = divmod(i, radix)
+            coords.append(c)
+        (gi, ai, pi, di, mi, ppi, pci, oi, ri, si, ei) = reversed(coords)
+
+        gspec = _as_graph_spec(self.graphs[gi])
+        accel = self.accelerators[ai]
+        cls = ACCELERATORS[accel]
+        prob = self.problems[pi]
+        problem = PROBLEMS[prob]
+        dname, channels = _as_dram_axis(self.drams[di])
+        base_dram = DRAM_CONFIGS[dname]
+
+        def skip(reason: str, label: str = "") -> Skipped:
+            return Skipped(graph=gspec.name, accelerator=accel, problem=prob,
+                           dram=dname, label=label, reason=reason)
+
+        # axis-independent incompatibilities (the whole dram block shares
+        # one reason; expand() dedups the repeats into one record)
+        if problem.needs_weights and not cls.supports_weights:
+            return skip(f"{accel} does not support weighted problems")
+        if channels and channels > 1 and not cls.supports_multichannel:
+            return skip(f"{accel} does not support multi-channel memory")
+
+        mapping = _as_mapping(self.mappings[mi])
+        policy = self.page_policies[ppi]
+        pc = self.pseudo_channels[pci]
+        if pc and base_dram.standard != "HBM":
+            return skip(f"pseudo-channels require HBM "
+                        f"({dname} is {base_dram.standard})")
+        if mapping.channel_lines != 1 and not pc:
+            return skip(f"channel-interleave granularity "
+                        f"({mapping.label}) only acts on the "
+                        f"pseudo-channel deal")
+        if (mapping.scheme == "bank_xor"
+                and base_dram.nbanks & (base_dram.nbanks - 1)):
+            return skip(f"bank_xor needs a power-of-two bank "
+                        f"count ({dname} has {base_dram.nbanks})")
+
+        ov = self.overrides[oi]
+        base_cfg = default_config(accel)
+        if channels and cls.supports_multichannel:
+            base_cfg = dataclasses.replace(base_cfg, n_pes=channels)
+        base_cfg = ov.apply(base_cfg)
+        try:
+            cfg = dataclasses.replace(
+                base_cfg, reorder=self.reorders[ri],
+                interval_scale=self.interval_scales[si],
+                semexec=self.engines[ei])
+            cls(cfg)  # model-side validation
+        except ValueError as e:
+            return skip(str(e), ov.label)
+        return Scenario(
+            graph=gspec,
+            accelerator=accel,
+            problem=prob,
+            dram=dram_config(dname, channels=channels, mapping=mapping,
+                             page_policy=policy, pseudo_channels=pc),
+            config=cfg,
+            root=gspec.root,
+            label=ov.label,
+        )
+
+    def scenario_at(self, i: int) -> Scenario | None:
+        """The scenario at raw point ``i``, or ``None`` for a filtered
+        combination — the sampling accessor of ``repro.sweep.search``."""
+        out = self.point_at(i)
+        return out if isinstance(out, Scenario) else None
+
+    def iter_points(self) -> Iterator[Scenario | Skipped]:
+        """Stream every raw point in expansion order without holding the
+        list; ``expand()`` is this plus skip-record dedup."""
+        for i in range(self.n_points):
+            yield self.point_at(i)
 
     def expand(self) -> tuple[list[Scenario], list[Skipped]]:
         self._validate()
         scenarios: list[Scenario] = []
         skipped: list[Skipped] = []
-        mem_axes = self._memory_axes()
-        for graph in self.graphs:
-            gspec = _as_graph_spec(graph)
-            for accel in self.accelerators:
-                cls = ACCELERATORS[accel]
-                for prob in self.problems:
-                    problem = PROBLEMS[prob]
-                    for dram_axis in self.drams:
-                        dname, channels = _as_dram_axis(dram_axis)
-                        base_dram = DRAM_CONFIGS[dname]
-
-                        seen_reasons: set[tuple[str, str]] = set()
-
-                        def skip(reason: str, label: str = ""):
-                            # dedup per (dram axis): the same incompatibility
-                            # recurring across memory-axis combinations is one
-                            # record, not mappings x policies x pc copies
-                            if (reason, label) in seen_reasons:
-                                return
-                            seen_reasons.add((reason, label))
-                            skipped.append(Skipped(
-                                graph=gspec.name, accelerator=accel,
-                                problem=prob, dram=dname,
-                                label=label, reason=reason,
-                            ))
-
-                        # axis-independent incompatibilities: one record per
-                        # (graph, accel, problem, dram), not one per memory
-                        # axis x override combination
-                        if problem.needs_weights and not cls.supports_weights:
-                            skip(f"{accel} does not support weighted problems")
-                            continue
-                        if channels and channels > 1 and not cls.supports_multichannel:
-                            skip(f"{accel} does not support multi-channel memory")
-                            continue
-                        for mapping, policy, pc in mem_axes:
-                            reason = None
-                            if pc and base_dram.standard != "HBM":
-                                reason = (f"pseudo-channels require HBM "
-                                          f"({dname} is {base_dram.standard})")
-                            elif mapping.channel_lines != 1 and not pc:
-                                reason = (f"channel-interleave granularity "
-                                          f"({mapping.label}) only acts on the "
-                                          f"pseudo-channel deal")
-                            elif (mapping.scheme == "bank_xor"
-                                    and base_dram.nbanks & (base_dram.nbanks - 1)):
-                                reason = (f"bank_xor needs a power-of-two bank "
-                                          f"count ({dname} has {base_dram.nbanks})")
-                            if reason is not None:
-                                skip(reason)
-                                continue
-                            for ov in self.overrides:
-                                base_cfg = default_config(accel)
-                                if channels and cls.supports_multichannel:
-                                    base_cfg = dataclasses.replace(
-                                        base_cfg, n_pes=channels)
-                                base_cfg = ov.apply(base_cfg)
-                                for reorder in self.reorders:
-                                    for scale in self.interval_scales:
-                                        for eng in self.engines:
-                                            try:
-                                                cfg = dataclasses.replace(
-                                                    base_cfg, reorder=reorder,
-                                                    interval_scale=scale,
-                                                    semexec=eng)
-                                                cls(cfg)  # model-side validation
-                                            except ValueError as e:
-                                                skip(str(e), ov.label)
-                                                continue
-                                            scenarios.append(Scenario(
-                                                graph=gspec,
-                                                accelerator=accel,
-                                                problem=prob,
-                                                dram=dram_config(
-                                                    dname, channels=channels,
-                                                    mapping=mapping,
-                                                    page_policy=policy,
-                                                    pseudo_channels=pc,
-                                                ),
-                                                config=cfg,
-                                                root=gspec.root,
-                                                label=ov.label,
-                                            ))
+        # dedup skips per (graph, accel, problem, dram) block: the same
+        # incompatibility recurring across memory-axis x override x layout
+        # combinations is one record, not one per combination
+        shape = self.axis_shape
+        block = math.prod(shape[4:])  # points per dram block
+        seen: set[tuple] = set()
+        for i, out in enumerate(self.iter_points()):
+            if isinstance(out, Scenario):
+                scenarios.append(out)
+                continue
+            key = (i // block, out.reason, out.label)
+            if key not in seen:
+                seen.add(key)
+                skipped.append(out)
         return scenarios, skipped
 
     def scenarios(self) -> list[Scenario]:

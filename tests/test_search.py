@@ -1,0 +1,483 @@
+"""repro.sweep.search: feature encoding, surrogates, acquisition, the
+adaptive search loop (objective + frontier modes, warm start, budget
+discipline, determinism), and serve-side search jobs (lifecycle, cancel,
+journal resume)."""
+import json
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.graph.generators import GraphSpec
+from repro.serve import (
+    ProtocolError,
+    SweepScheduler,
+    TERMINAL_EVENTS,
+    search_from_wire,
+    search_to_wire,
+)
+from repro.sweep import ResultCache, SweepSpec, run_sweep, scenario_hash
+from repro.sweep.cache import canonical_json
+from repro.sweep.results import result_rows
+from repro.sweep.search import (
+    FeatureEncoder,
+    ForestSurrogate,
+    GPSurrogate,
+    SearchSpec,
+    expected_improvement,
+    propose,
+    raw_features,
+    run_search,
+)
+
+TINY = GraphSpec("tiny", "uniform", 256, 1024, True, 1, 0)
+
+
+def search_space(**kw):
+    """A 4x2x3x2x2 design space (~50 valid candidates after filtering)."""
+    axes = dict(
+        name="srch",
+        accelerators=("accugraph", "hitgraph", "foregraph", "thundergp"),
+        graphs=(TINY,),
+        problems=("bfs", "pr"),
+        drams=("default", ("hbm", 4), ("hbm", 8)),
+        mappings=("row", "bank_xor@32"),
+        page_policies=("open", "closed"),
+    )
+    axes.update(kw)
+    return SweepSpec(**axes)
+
+
+def surface(s) -> float:
+    """Deterministic synthetic response with axis interactions."""
+    v = 1.0
+    v *= {"accugraph": 1.0, "hitgraph": 0.8, "foregraph": 1.3,
+          "thundergp": 1.1}[s.accelerator]
+    v *= {"bfs": 1.0, "pr": 2.0}[s.problem]
+    v *= {1: 1.0, 4: 0.6, 8: 0.45}[s.dram.channels]
+    v *= 0.9 if s.dram.mapping.label.startswith("bank_xor") else 1.0
+    v *= 0.95 if s.dram.page_policy == "open" else 1.0
+    if s.accelerator == "hitgraph" and s.dram.page_policy == "closed":
+        v *= 1.8  # interaction: hitgraph hates closed pages
+    return v
+
+
+def synthetic_executor(fn=surface, calls=None, fail=()):
+    """Loop executor returning synthetic records; no simulation."""
+    def executor(scenarios):
+        out = []
+        for s in scenarios:
+            if calls is not None:
+                calls.append(s.scenario_id)
+            if s.accelerator in fail:
+                out.append((dict(status="error", error="boom"), "error"))
+            else:
+                out.append((dict(status="ok", runtime_s=fn(s)), "ok"))
+        return out
+    return executor
+
+
+def true_best(spec, fn=surface):
+    return min(fn(s) for s in spec.scenarios())
+
+
+# ---- encoder ----------------------------------------------------------------
+
+
+def test_encoder_drops_constant_axes_and_encodes_pool():
+    spec = search_space()
+    raws = [raw_features(s) for s in spec.scenarios()]
+    enc = FeatureEncoder().fit(raws)
+    X = enc.matrix(raws)
+    assert X.shape == (len(raws), enc.dim)
+    # constant axes (graph, label, reorder, ...) contribute no columns
+    assert not any(n.startswith("graph=") for n in enc.feature_names)
+    assert any(n.startswith("accelerator=") for n in enc.feature_names)
+    # numeric axes are single scaled columns in [0, 1]
+    ci = enc.feature_names.index("channels")
+    assert X[:, ci].min() == 0.0 and X[:, ci].max() == 1.0
+    # distinct candidates encode distinctly
+    assert len({tuple(row) for row in X}) == len(raws)
+
+
+# ---- surrogates -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", [ForestSurrogate, GPSurrogate])
+def test_surrogate_fits_and_predicts_deterministically(cls):
+    rng = np.random.default_rng(0)
+    X = rng.random((40, 5))
+    y = X @ np.array([3.0, -2.0, 0.5, 0.0, 1.0]) + 0.01 * rng.random(40)
+    Xq = rng.random((10, 5))
+    m1, s1 = cls().fit(X, y, np.random.default_rng(7)).predict(Xq)
+    m2, s2 = cls().fit(X, y, np.random.default_rng(7)).predict(Xq)
+    assert np.array_equal(m1, m2) and np.array_equal(s1, s2)
+    assert np.all(np.isfinite(m1)) and np.all(s1 > 0)
+    # predictions track the target better than the mean baseline
+    truth = Xq @ np.array([3.0, -2.0, 0.5, 0.0, 1.0])
+    assert np.abs(m1 - truth).mean() < np.abs(truth.mean() - truth).mean()
+
+
+# ---- acquisition ------------------------------------------------------------
+
+
+def test_expected_improvement_prefers_better_and_uncertain():
+    mean = np.array([1.0, 0.5, 1.0])
+    std = np.array([0.1, 0.1, 0.5])
+    ei = expected_improvement(mean, std, best=0.9)
+    assert ei[1] > ei[0]  # lower predicted mean wins
+    assert ei[2] > ei[0]  # more uncertainty wins at equal mean
+
+
+def test_propose_topk_deterministic_and_epsilon_explores():
+    scores = np.array([0.1, 0.9, 0.5, 0.7])
+    assert propose(scores, 2, np.random.default_rng(0)) == [1, 3]
+    assert propose(scores, 4, np.random.default_rng(0)) == [1, 3, 2, 0]
+    # epsilon=1.0: pure seeded random, replayable, no duplicates
+    a = propose(scores, 3, np.random.default_rng(5), epsilon=1.0)
+    b = propose(scores, 3, np.random.default_rng(5), epsilon=1.0)
+    assert a == b and len(set(a)) == 3
+
+
+# ---- the loop: objective mode ----------------------------------------------
+
+
+def test_search_finds_optimum_with_quarter_budget():
+    spec = search_space()
+    pool = len(spec.scenarios())
+    budget = pool // 4
+    sspec = SearchSpec(space=spec, budget=budget, batch=4, seed=0)
+    res = run_search(sspec, cache=ResultCache(None),
+                     executor=synthetic_executor())
+    assert res.executed <= budget
+    assert res.best is not None
+    assert res.best["value"] <= true_best(spec) * 1.05
+    # history carries the regret curve substrate
+    assert [h["round"] for h in res.history] == list(
+        range(1, len(res.history) + 1))
+    assert res.history[-1]["best"] == res.best["value"]
+
+
+def test_search_deterministic_under_seed():
+    spec = search_space()
+    sspec = SearchSpec(space=spec, budget=10, batch=3, seed=11)
+    r1 = run_search(sspec, cache=ResultCache(None),
+                    executor=synthetic_executor())
+    r2 = run_search(sspec, cache=ResultCache(None),
+                    executor=synthetic_executor())
+    assert [p["hash"] for p in r1.probes] == [p["hash"] for p in r2.probes]
+    assert r1.best == r2.best and r1.history == r2.history
+
+
+def test_search_warm_start_converges_to_zero_executions(tmp_path):
+    spec = search_space()
+    cache = ResultCache(str(tmp_path / "c"))
+    for s in spec.scenarios():
+        cache.put(scenario_hash(s), dict(status="ok", runtime_s=surface(s)))
+    calls = []
+    res = run_search(SearchSpec(space=spec, budget=8, batch=4, seed=2),
+                     cache=cache, executor=synthetic_executor(calls=calls))
+    assert res.executed == 0 and not calls
+    assert res.warm == res.pool
+    assert res.best["value"] == pytest.approx(true_best(spec))
+
+
+def test_search_group_by_reports_best_per_group():
+    spec = search_space()
+    sspec = SearchSpec(space=spec, budget=30, batch=6, seed=0,
+                       group_by=("problem",))
+    res = run_search(sspec, cache=ResultCache(None),
+                     executor=synthetic_executor())
+    truth = {}
+    for s in spec.scenarios():
+        v = surface(s)
+        if s.problem not in truth or v < truth[s.problem]:
+            truth[s.problem] = v
+    assert set(res.groups) == set(truth)
+    for prob, best in truth.items():
+        assert res.groups[prob]["value"] <= best * 1.05
+
+
+def test_search_tolerates_error_records():
+    spec = search_space()
+    res = run_search(SearchSpec(space=spec, budget=20, batch=5, seed=1),
+                     cache=ResultCache(None),
+                     executor=synthetic_executor(fail=("foregraph",)))
+    assert res.errors > 0 or all(
+        p["status"] != "error" for p in res.probes)  # seed may dodge them
+    for p in res.probes:  # an error probe never becomes the answer
+        if p["status"] == "error":
+            assert p["value"] is None
+    assert res.best is not None and res.best["value"] > 0
+
+
+def test_search_patience_stops_early():
+    spec = search_space()
+    res = run_search(SearchSpec(space=spec, budget=40, batch=4, seed=0,
+                                patience=2),
+                     cache=ResultCache(None), executor=synthetic_executor())
+    assert res.executed < 40  # converged before the budget ran out
+
+
+def test_search_spec_validation():
+    spec = search_space()
+    with pytest.raises(ValueError, match="direction"):
+        SearchSpec(space=spec, direction="sideways")
+    with pytest.raises(ValueError, match="surrogate"):
+        SearchSpec(space=spec, surrogate="oracle")
+    with pytest.raises(ValueError, match="axis field"):
+        SearchSpec(space=spec, group_by=("flux",))
+    with pytest.raises(ValueError, match="budget_frac"):
+        SearchSpec(space=spec, budget_frac=0.0)
+
+
+def test_max_pool_subsamples_deterministically():
+    spec = search_space()
+    s1 = run_search(SearchSpec(space=spec, budget=5, batch=5, seed=3,
+                               max_pool=16),
+                    cache=ResultCache(None), executor=synthetic_executor())
+    s2 = run_search(SearchSpec(space=spec, budget=5, batch=5, seed=3,
+                               max_pool=16),
+                    cache=ResultCache(None), executor=synthetic_executor())
+    assert s1.pool == s2.pool <= 16
+    assert [p["hash"] for p in s1.probes] == [p["hash"] for p in s2.probes]
+
+
+# ---- the loop: frontier mode ------------------------------------------------
+
+
+def test_frontier_detects_ranking_flip():
+    spec = search_space(accelerators=("accugraph", "hitgraph"),
+                        problems=("bfs",), drams=("default",),
+                        mappings=("row",))
+    # contexts = page policies; hitgraph wins open, loses closed
+    pool = len(spec.scenarios())
+    res = run_search(SearchSpec(space=spec, mode="frontier", budget=pool,
+                                batch=2, seed=0),
+                     cache=ResultCache(None), executor=synthetic_executor())
+    fr = res.frontier
+    assert fr["rank_over"] == "accelerator"
+    assert fr["contexts"] == 2 and fr["resolved"] == 2
+    assert fr["baseline_winner"] in ("accugraph", "hitgraph")
+    assert len(fr["flips"]) == 1
+    flip = fr["flips"][0]
+    assert flip["resolved"] is True
+    assert flip["context"]["page_policy"] in ("open", "closed")
+    assert {flip["winner"], flip["runner_up"]} == {"accugraph", "hitgraph"}
+
+
+# ---- executor path: byte-identity with grid sweeps -------------------------
+
+
+def test_runner_executor_rows_byte_identical_to_grid(tmp_path):
+    spec = SweepSpec(name="bi", accelerators=("accugraph", "hitgraph"),
+                     graphs=(TINY,), problems=("bfs",),
+                     drams=("default", ("hbm", 4)))
+    pool = len(spec.scenarios())
+    res = run_search(SearchSpec(space=spec, budget=pool, batch=2, seed=5),
+                     cache_dir=str(tmp_path / "c"))
+    assert res.executed == pool
+    grid = run_sweep(spec, cache_dir=str(tmp_path / "g"))  # fresh cache
+    by_hash = {scenario_hash(sr.scenario): row for sr, row in
+               zip(grid.results, result_rows(grid, with_status=False))}
+    assert len(res.probes) == pool
+    for p in res.probes:
+        assert canonical_json(p["row"]) == canonical_json(by_hash[p["hash"]])
+    # and the probes landed in the search cache: a re-run is free
+    res2 = run_search(SearchSpec(space=spec, budget=pool, batch=2, seed=9),
+                      cache_dir=str(tmp_path / "c"))
+    assert res2.executed == 0 and res2.warm == pool
+
+
+# ---- wire format ------------------------------------------------------------
+
+
+def test_search_wire_roundtrip():
+    sspec = SearchSpec(space=search_space(), objective="mteps",
+                       direction="max", mode="frontier", budget=12,
+                       batch=3, group_by=("graph",), seed=42,
+                       surrogate="gp", epsilon=0.25)
+    back = search_from_wire(json.loads(json.dumps(search_to_wire(sspec))))
+    assert back == sspec
+    assert back.space.expand()[0] == sspec.space.expand()[0]
+
+
+def test_search_wire_rejects_unknown_fields():
+    wire = search_to_wire(SearchSpec(space=search_space()))
+    wire["temperature"] = 0.7
+    with pytest.raises(ProtocolError, match="temperature"):
+        search_from_wire(wire)
+    with pytest.raises(ProtocolError, match="space"):
+        search_from_wire({"budget": 3})
+
+
+# ---- serve-side search jobs -------------------------------------------------
+
+
+class GatedPool:
+    """In-process WorkerPool stand-in (threads, real execution); optional
+    per-chunk gates make dispatch timing deterministic."""
+
+    def __init__(self, size=2, gates=None):
+        self.size = size
+        self.gates = gates
+        self.chunks = []
+        self._threads = []
+
+    def submit(self, fn, *args):
+        fut = Future()
+        n = len(self.chunks)
+        self.chunks.append(list(args[0]))
+        gate = self.gates[n] if self.gates and n < len(self.gates) else None
+
+        def run():
+            if gate is not None:
+                gate.wait(timeout=60)
+            try:
+                fut.set_result(fn(*args))
+            except BaseException as e:
+                fut.set_exception(e)
+
+        t = threading.Thread(target=run, daemon=True)
+        self._threads.append(t)
+        t.start()
+        return fut
+
+    def shutdown(self, wait=True, cancel_pending=False):
+        if self.gates:
+            for g in self.gates:
+                g.set()
+        if wait:
+            for t in self._threads:
+                t.join(timeout=60)
+
+    def stats(self):
+        return dict(size=self.size, busy=0,
+                    chunks_submitted=len(self.chunks), utilization=0.0)
+
+
+def collect_events(job, timeout=120.0):
+    events = []
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        try:
+            ev = job.events.get(timeout=1.0)
+        except Exception:
+            continue
+        events.append(ev)
+        if ev["type"] in TERMINAL_EVENTS:
+            return events
+    pytest.fail(f"job {job.id} produced no terminal event in {timeout}s")
+
+
+def wait_for(cond, timeout=30.0, what="condition"):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return
+        time.sleep(0.02)
+    pytest.fail(f"timed out waiting for {what}")
+
+
+def serve_space():
+    return SweepSpec(name="ss", accelerators=("accugraph", "hitgraph"),
+                     graphs=(TINY,), problems=("bfs",), drams=("default",))
+
+
+def test_serve_search_lifecycle_and_row_identity(tmp_path):
+    sched = SweepScheduler(cache_dir=str(tmp_path / "c"),
+                           pool_factory=GatedPool)
+    try:
+        spec = serve_space()
+        pool = len(spec.scenarios())
+        job = sched.submit_search(SearchSpec(space=spec, budget=pool,
+                                             batch=1, seed=0))
+        events = collect_events(job)
+        types = [e["type"] for e in events]
+        assert types[0] == "job" and events[0]["kind"] == "search"
+        assert types[-2:] == ["search_result", "done"]
+        assert "proposal" in types
+        rows = [e for e in events if e["type"] == "row"]
+        assert len(rows) == pool
+        assert all(e["status"] == "ok" for e in rows)
+        result = events[-2]["result"]
+        assert result["executed"] == pool and result["best"] is not None
+
+        # a grid submission of the same space is now fully cached, and its
+        # rows are byte-identical to the search's probe rows
+        grid_job = sched.submit(spec)
+        grid_events = collect_events(grid_job)
+        grid_rows = {grid_job.hashes[e["index"]]: e["row"]
+                     for e in grid_events if e["type"] == "row"}
+        assert all(e["status"] == "cached"
+                   for e in grid_events if e["type"] == "row")
+        for e in rows:
+            h = job.hashes[e["index"]]
+            assert canonical_json(e["row"]) == canonical_json(grid_rows[h])
+    finally:
+        sched.close()
+
+
+def test_serve_search_cancel_unblocks_loop(tmp_path):
+    gate = threading.Event()  # first chunk parks until released
+    sched = SweepScheduler(cache_dir=str(tmp_path / "c"),
+                           pool_factory=lambda: GatedPool(gates=[gate]))
+    try:
+        job = sched.submit_search(SearchSpec(space=serve_space(), budget=2,
+                                             batch=2, seed=0))
+        wait_for(lambda: sched.pool.chunks, what="first dispatch")
+        assert sched.cancel(job.id)
+        events = collect_events(job, timeout=30.0)
+        assert events[-1]["type"] == "cancelled"
+        gate.set()
+        # the loop thread must exit (abort), not hang on the dead probe
+        wait_for(lambda: not any(
+            t.name.startswith("search-") and t.is_alive()
+            for t in threading.enumerate()), what="search thread exit")
+    finally:
+        sched.close()
+
+
+def test_serve_search_journal_resume(tmp_path):
+    cache_dir = str(tmp_path / "c")
+    gate = threading.Event()
+    sched1 = SweepScheduler(cache_dir=cache_dir,
+                            pool_factory=lambda: GatedPool(gates=[gate]))
+    spec = serve_space()
+    pool = len(spec.scenarios())
+    job = sched1.submit_search(SearchSpec(space=spec, budget=pool, batch=1,
+                                          seed=0))
+    wait_for(lambda: sched1.pool.chunks, what="first dispatch")
+    # drain mid-search: the gated chunk finishes during pool shutdown, the
+    # next proposal aborts, the job is interrupted with no terminal journal op
+    sched1.drain(timeout=30.0)
+    events = collect_events(job, timeout=30.0)
+    assert events[-1]["type"] == "interrupted"
+    assert sched1.journal.load_open() and \
+        sched1.journal.load_open()[0]["kind"] == "search"
+
+    # a restarted scheduler resumes the search under its original id;
+    # already-executed probes come back from the cache
+    sched2 = SweepScheduler(cache_dir=cache_dir, pool_factory=GatedPool)
+    try:
+        resumed = sched2.get_job(job.id)
+        assert resumed is not None and resumed.kind == "search"
+        events2 = collect_events(resumed)
+        assert events2[-1]["type"] == "done"
+        result = [e for e in events2 if e["type"] == "search_result"][0]
+        r = result["result"]
+        assert r["executed"] + r["warm"] + r["cached"] >= pool
+        assert r["warm"] + r["cached"] >= 1  # the pre-drain probe was reused
+        assert sched2.journal.load_open() == []  # closed with an end op
+    finally:
+        sched2.close()
+
+
+def test_serve_search_rejected_while_draining(tmp_path):
+    sched = SweepScheduler(cache_dir=str(tmp_path / "c"),
+                           pool_factory=GatedPool)
+    sched.drain(timeout=5.0)
+    with pytest.raises(RuntimeError, match="draining"):
+        sched.submit_search(SearchSpec(space=serve_space(), budget=1))

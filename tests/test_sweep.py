@@ -350,3 +350,96 @@ def test_cli_end_to_end(tmp_path, capsys):
     capsys.readouterr()
     assert main(args) == 0  # second run: all cached
     assert "1 cached, 0 executed" in capsys.readouterr().out
+
+
+# ---- lazy (indexable) expansion --------------------------------------------
+
+
+def test_point_at_matches_expand_order():
+    spec = tiny_spec(accels=("accugraph", "hitgraph", "foregraph"),
+                     problems=("bfs", "sssp"),
+                     drams=("default", ("hbm", 4)),
+                     page_policies=("open", "closed"))
+    lazy = [spec.point_at(i) for i in range(spec.n_points)]
+    streamed = list(spec.iter_points())
+    assert lazy == streamed
+    scenarios = [p for p in lazy if not hasattr(p, "reason")]
+    assert scenarios == spec.scenarios()
+    # byte-identical addressing: same hashes either way
+    assert [scenario_hash(s) for s in scenarios] == \
+        [scenario_hash(s) for s in spec.scenarios()]
+
+
+def test_scenario_at_none_for_filtered_points():
+    spec = tiny_spec(accels=("accugraph", "foregraph"), problems=("sssp",))
+    # foregraph has no weighted support: its sssp points are filtered
+    vals = [spec.scenario_at(i) for i in range(spec.n_points)]
+    assert any(v is None for v in vals)
+    assert [v for v in vals if v is not None] == spec.scenarios()
+    with pytest.raises(IndexError):
+        spec.point_at(spec.n_points)
+
+
+def test_expand_skip_dedup_matches_lazy_stream():
+    spec = tiny_spec(accels=("accugraph", "foregraph"),
+                     problems=("sssp",), mappings=("row", "bank_xor@32"))
+    scenarios, skipped = spec.expand()
+    raw_skips = [p for p in spec.iter_points() if hasattr(p, "reason")]
+    assert len(skipped) <= len(raw_skips)  # deduped per dram block
+    assert {s.reason for s in skipped} == {s.reason for s in raw_skips}
+
+
+# ---- bulk cache probe / memoization ----------------------------------------
+
+
+def test_lookup_many_matches_individual_gets(tmp_path):
+    cache = ResultCache(str(tmp_path))
+    recs = {f"{i:02x}" + "0" * 62: dict(status="ok", runtime_s=float(i))
+            for i in range(8)}
+    for h, r in list(recs.items())[:5]:
+        cache.put(h, r)
+    missing = list(recs)[5:]
+    got = cache.lookup_many(list(recs))
+    assert got == {h: r for h, r in list(recs.items())[:5]}
+    assert all(cache.get(h) == got.get(h) for h in got)
+    assert all(cache.get(h) is None for h in missing)
+    # disabled cache: bulk probe is an empty dict, like get() is None
+    assert ResultCache(None).lookup_many(list(recs)) == {}
+
+
+def test_lookup_many_quarantines_corrupt_files(tmp_path):
+    cache = ResultCache(str(tmp_path))
+    good, bad = "aa" + "0" * 62, "ab" + "0" * 62
+    cache.put(good, dict(status="ok", runtime_s=1.0))
+    cache.put(bad, dict(status="ok", runtime_s=2.0))
+    with open(cache.path(bad), "w") as f:
+        f.write("{truncated")
+    got = cache.lookup_many([good, bad])
+    assert list(got) == [good]
+    import os
+    assert os.path.exists(cache.path(bad) + ".bad")  # same as get()
+
+
+def test_memo_capacity_serves_hits_after_file_deletion(tmp_path):
+    import os
+
+    cache = ResultCache(str(tmp_path), memo_capacity=4)
+    h = "cc" + "0" * 62
+    rec = dict(status="ok", runtime_s=3.0)
+    cache.put(h, rec)
+    os.unlink(cache.path(h))
+    assert cache.get(h) == rec  # memoized: content addresses are immutable
+    assert cache.lookup_many([h]) == {h: rec}
+    # default capacity 0 keeps the old read-through behaviour
+    cold = ResultCache(str(tmp_path))
+    assert cold.get(h) is None
+
+
+def test_memo_capacity_evicts_fifo(tmp_path):
+    cache = ResultCache(str(tmp_path), memo_capacity=2)
+    hs = [f"d{i:01x}" + "0" * 62 for i in range(3)]
+    for i, h in enumerate(hs):
+        cache.put(h, dict(status="ok", runtime_s=float(i)))
+    assert hs[0] not in cache._memo and hs[2] in cache._memo
+    # evicted entries still resolve from disk
+    assert cache.get(hs[0]) == dict(status="ok", runtime_s=0.0)
