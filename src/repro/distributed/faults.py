@@ -24,7 +24,18 @@ a **kind**:
              returned — exercises the scheduler's record validation
 ``error``    (scenario site) the attempt returns a synthetic error record —
              exercises :class:`~repro.sweep.runner.ExecutionPolicy` retries
+``drop``     (``remote`` site) the chunk is assigned to a worker host but
+             never delivered — exercises the remote pool's liveness
+             deadline and re-dispatch
+``disconnect``  (``remote`` site) the pool severs the host's control
+             stream right after assignment — exercises loss-on-disconnect
+             and host re-registration
 ===========  ================================================================
+
+The ``"remote"`` site is consulted by
+:class:`repro.distributed.remote.RemoteWorkerPool` at every chunk
+assignment (``delay`` also applies there: the dispatch message is held
+back ``delay_s`` before hitting the wire).
 
 Rules select occurrences three ways, all deterministic: ``at`` (explicit
 occurrence indices at the site — for chunk dispatches, the scheduler's
@@ -50,7 +61,8 @@ import threading
 import time
 from collections import Counter
 
-KINDS = ("crash", "hang", "stall", "delay", "corrupt", "error")
+KINDS = ("crash", "hang", "stall", "delay", "corrupt", "error", "drop",
+         "disconnect")
 HANG_S = 3600.0  # a "hang" sleeps until the pool's liveness deadline kills it
 
 

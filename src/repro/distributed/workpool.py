@@ -24,9 +24,16 @@ the chunk it was running, never the pool:
   ``max_respawns``; a slot that keeps dying is retired, and when every
   slot is retired the pool reports itself broken instead of hanging.
 
+Every supervision deadline — heartbeat staleness, chunk liveness, respawn
+backoff, shutdown grace — is measured on ``time.monotonic()``: an NTP
+step or a suspend/resume moves the wall clock, not the deadlines, so it
+can neither fake a mass ``WorkerLost`` nor stretch a drain.
+
 Anything with the same ``submit``/``shutdown``/``size``/``busy`` surface
 can stand in for it — the scheduler tests inject in-process pools to make
-in-flight-join and fault timing deterministic.
+in-flight-join and fault timing deterministic
+(:class:`repro.distributed.remote.RemoteWorkerPool` dispatches the same
+contract across machines).
 """
 from __future__ import annotations
 
@@ -106,7 +113,7 @@ def _worker_main(conn, initializer, initargs, heartbeat_s: float) -> None:
     def beat() -> None:
         while True:
             time.sleep(heartbeat_s)
-            send(("hb", time.time()))
+            send(("hb", time.monotonic()))
 
     threading.Thread(target=beat, name="workpool-heartbeat",
                      daemon=True).start()
@@ -214,14 +221,14 @@ class WorkerPool:
         self._fire(completions)
         if wait:
             grace = grace_s if grace_s is not None else self.task_deadline_s
-            deadline = None if grace is None else time.time() + grace
+            deadline = None if grace is None else time.monotonic() + grace
             while True:
                 with self._lock:
                     running = any(s.task is not None for s in self._slots)
                     pending = bool(self._tasks)
                 if not running and not pending:
                     break
-                if deadline is not None and time.time() > deadline:
+                if deadline is not None and time.monotonic() > deadline:
                     break
                 time.sleep(0.05)
         completions = []
@@ -273,7 +280,7 @@ class WorkerPool:
         child.close()
         s.proc, s.conn = proc, parent
         s.ready = False
-        s.last_hb = time.time()  # init counts against the stall deadline
+        s.last_hb = time.monotonic()  # init counts against the stall deadline
 
     def _stop_slot(self, s: _Slot) -> None:
         if s.conn is not None:
@@ -329,16 +336,16 @@ class WorkerPool:
                 self._tasks = []
         else:
             self._respawns += 1
-            s.spawn_after = (time.time()
+            s.spawn_after = (time.monotonic()
                              + self.respawn_backoff_s * 2 ** (s.respawns - 1))
 
     def _handle_msg(self, s: _Slot, msg, completions) -> None:
         kind = msg[0]
         if kind == "ready":
             s.ready = True
-            s.last_hb = time.time()
+            s.last_hb = time.monotonic()
         elif kind == "hb":
-            s.last_hb = time.time()
+            s.last_hb = time.monotonic()
         elif kind in ("ok", "err"):
             _, task_id, payload = msg
             if s.task is not None and s.task.id == task_id:
@@ -357,7 +364,7 @@ class WorkerPool:
             with self._lock:
                 if self._closed:
                     return
-                now = time.time()
+                now = time.monotonic()
                 for s in self._slots:
                     # (re)spawn due seats
                     if (s.proc is None and not s.retired
@@ -401,7 +408,7 @@ class WorkerPool:
                             self._handle_msg(s, s.conn.recv(), completions)
                     except (EOFError, OSError):
                         pass  # the liveness pass below records the loss
-                now = time.time()
+                now = time.monotonic()
                 for s in self._slots:
                     if s.proc is None:
                         continue

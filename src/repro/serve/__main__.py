@@ -24,6 +24,25 @@ axis flags, plus the query flags of ``python -m repro.sweep search``):
 ``--port 0`` picks a free port; ``--port-file`` writes the bound
 ``host:port`` for whoever spawned the server (the bench harness and CI
 use this for discovery).
+
+Multi-host serving: ``--worker-listen HOST:PORT`` makes the server run a
+:class:`~repro.distributed.remote.RemoteWorkerPool` instead of a local
+spawn pool — it executes nothing until worker hosts connect.  On each
+host, start an agent that registers its seats and runs chunks on a warm
+local pool:
+
+    PYTHONPATH=src python -m repro.serve --port 8731 \
+        --cache results/sweep_cache --worker-listen 0.0.0.0:8732
+
+    # on every worker host
+    PYTHONPATH=src python -m repro.serve worker \
+        --connect scheduler-host:8732 --seats 4
+
+Hosts re-register with backoff after a scheduler restart or network
+blip; a host that dies mid-chunk surfaces as a ``WorkerLost`` and its
+chunks re-dispatch to the surviving hosts.  ``--worker-listen`` with
+port 0 picks a free port; ``--worker-port-file`` writes the bound
+address for the spawning harness.
 """
 from __future__ import annotations
 
@@ -68,12 +87,28 @@ def _serve(args: argparse.Namespace) -> int:
     except (OSError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
+    pool_factory = None
+    if args.worker_listen:
+        from repro.distributed.remote import RemoteWorkerPool, parse_address
+
+        try:
+            whost, wport = parse_address(args.worker_listen)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+
+        def pool_factory(whost=whost, wport=wport):
+            return RemoteWorkerPool(
+                host=whost, port=wport, fault_plan=fault_plan,
+                task_deadline_s=args.worker_deadline or None)
+
     server = SweepServer(
         host=args.host, port=args.port,
         cache_dir=args.cache or None,
         workers=args.workers, mode=args.mode, policy=policy,
         chunk_size=args.chunk_size, trace_hashes=args.trace_hashes,
         quiet=args.quiet,
+        pool_factory=pool_factory,
         poison_threshold=args.poison_threshold,
         fault_plan=fault_plan,
         worker_deadline_s=args.worker_deadline or None,
@@ -84,11 +119,54 @@ def _serve(args: argparse.Namespace) -> int:
     if args.port_file:
         with open(args.port_file, "w") as f:
             f.write(server.address + "\n")
-    print(f"serving on http://{server.address} "
-          f"(cache={args.cache or '<none>'}, workers={args.workers})",
-          flush=True)
+    if args.worker_listen:
+        pool_addr = server.scheduler.pool.address
+        if args.worker_port_file:
+            with open(args.worker_port_file, "w") as f:
+                f.write(pool_addr + "\n")
+        print(f"serving on http://{server.address} "
+              f"(cache={args.cache or '<none>'}, worker hosts connect to "
+              f"{pool_addr})", flush=True)
+    else:
+        print(f"serving on http://{server.address} "
+              f"(cache={args.cache or '<none>'}, workers={args.workers})",
+              flush=True)
     server.wait()
     return 0
+
+
+def worker_main(argv: list[str] | None = None) -> int:
+    """``python -m repro.serve worker``: one worker-host agent."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve worker",
+        description="Worker-host agent: connects out to a scheduler's "
+                    "--worker-listen port, registers its seats, executes "
+                    "dispatched chunks on a warm local worker pool, and "
+                    "re-registers with backoff after disconnects.")
+    ap.add_argument("--connect", required=True,
+                    help="scheduler worker-listen address (host:port)")
+    ap.add_argument("--seats", type=int, default=2,
+                    help="local spawn-worker pool size to offer")
+    ap.add_argument("--name", default="",
+                    help="host label in scheduler stats "
+                         "(default: hostname:pid)")
+    ap.add_argument("--worker-deadline", type=float, default=300.0,
+                    help="per-chunk liveness deadline of the local pool "
+                         "(0 disables)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress structured logs on stderr")
+    args = ap.parse_args(argv)
+
+    from repro.distributed.remote import run_worker_host
+    from repro.serve.server import jlog
+
+    log = (lambda event, **kw: None) if args.quiet else (
+        lambda event, **kw: jlog(event, **kw))
+    outcome = run_worker_host(args.connect, seats=max(1, args.seats),
+                              name=args.name or None,
+                              worker_deadline_s=args.worker_deadline or None,
+                              log=log)
+    return 0 if outcome == "shutdown" else 1
 
 
 def _submit(args: argparse.Namespace) -> int:
@@ -159,6 +237,10 @@ def _search(args: argparse.Namespace) -> int:
 
 
 def main(argv: list[str] | None = None) -> int:
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "worker":
+        return worker_main(argv[1:])
     ap = argparse.ArgumentParser(prog="python -m repro.serve",
                                  description=__doc__)
     mode = ap.add_mutually_exclusive_group()
@@ -205,6 +287,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-resume", action="store_true",
                     help="skip journal recovery of unfinished jobs from a "
                          "previous server run")
+    # multi-host knobs
+    ap.add_argument("--worker-listen", default="",
+                    help="host:port to accept worker hosts on; replaces the "
+                         "local pool with a RemoteWorkerPool (port 0 picks "
+                         "a free port, see --worker-port-file)")
+    ap.add_argument("--worker-port-file", default="",
+                    help="write the bound worker-listen host:port here once "
+                         "listening")
     add_policy_args(ap)
     # client knobs
     ap.add_argument("--out", default="results/served",

@@ -21,7 +21,11 @@ via ``GET /jobs/<id>``.
 
 Crash safety is append-only + line-framed: a torn final line (killed
 mid-append) is ignored on load.  The file is compacted on startup so it
-holds only open jobs plus this run's appends.
+holds only open jobs plus this run's appends.  Appended ops are fsynced,
+and so is the containing *directory* after the file first comes into
+existence (and after the compaction rename) — without the dirfd fsync a
+crash right after server start could lose the journal file itself, ops
+and all, even though every op inside it was "durable".
 """
 from __future__ import annotations
 
@@ -29,6 +33,8 @@ import json
 import os
 import threading
 import time
+
+from repro.sweep.cache import fsync_dir
 
 
 class JobJournal:
@@ -38,6 +44,7 @@ class JobJournal:
         self.path = os.path.join(os.fspath(cache_dir), self.FILENAME)
         os.makedirs(os.path.dirname(self.path), exist_ok=True)
         self._lock = threading.Lock()
+        self._dir_synced = False
 
     # ---- append side -------------------------------------------------------
 
@@ -63,6 +70,12 @@ class JobJournal:
                 f.write(line)
                 f.flush()
                 os.fsync(f.fileno())
+            if not self._dir_synced:
+                # the first append may have *created* the file: its
+                # directory entry must reach disk too, or a crash loses
+                # the whole journal despite the data fsync above
+                fsync_dir(os.path.dirname(self.path))
+                self._dir_synced = True
 
     # ---- replay side -------------------------------------------------------
 
@@ -114,4 +127,6 @@ class JobJournal:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self.path)
+            fsync_dir(os.path.dirname(self.path))  # make the rename durable
+            self._dir_synced = True
             return len(before) - len(keep)

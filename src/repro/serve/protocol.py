@@ -27,6 +27,23 @@ two-element lists, address mappings serialize to their ``label`` token
 ``spec_from_wire(spec_to_wire(s))`` expands to hash-identical scenarios —
 the server caches under the same content addresses as the CLI.
 
+The same framing carries the **worker-host protocol** of
+:class:`repro.distributed.remote.RemoteWorkerPool`: a worker host POSTs
+``/register`` and reads a JSONL downlink of ``registered`` / ``chunk`` /
+``ping`` / ``shutdown`` events, answering over short ``/result`` and
+``/heartbeat`` POSTs.  A ``chunk`` event is ``chunk_to_wire`` — fully
+resolved :class:`~repro.sweep.spec.Scenario` dicts
+(``scenario_to_wire``), the execution mode, the
+:class:`~repro.sweep.runner.ExecutionPolicy` (``policy_to_wire``, fault
+plan included), and any dispatch-time
+:class:`~repro.distributed.faults.FaultAction` — everything
+``repro.serve.worker.run_chunk`` takes, so a remote seat executes
+exactly what a local pool worker would.
+``scenario_from_wire(scenario_to_wire(s))`` is hash-identical under
+:func:`repro.sweep.cache.scenario_hash`, and records come back as the
+same JSON-safe dicts the cache stores — which is why multi-host rows are
+byte-identical to single-host rows.
+
 A *search* submission (``POST /search``, body ``{"search": <wire>}``)
 wraps a wire spec as the candidate ``space`` plus the query fields of
 :class:`repro.sweep.search.SearchSpec`; its stream adds three event
@@ -41,10 +58,12 @@ from __future__ import annotations
 import dataclasses
 import json
 
-from repro.core.dram import AddressMapping
+from repro.core.accelerators.base import AccelConfig
+from repro.core.dram import AddressMapping, DRAMConfig
 from repro.graph.generators import GraphSpec
+from repro.sweep.runner import ExecutionPolicy
 from repro.sweep.search.loop import SearchSpec
-from repro.sweep.spec import ConfigOverride, SweepSpec
+from repro.sweep.spec import ConfigOverride, Scenario, SweepSpec
 
 
 class ProtocolError(ValueError):
@@ -122,6 +141,114 @@ def spec_from_wire(d: dict) -> SweepSpec:
                          graphs=kw.pop("graphs", ()), **kw)
     except TypeError as e:
         raise ProtocolError(f"bad spec: {e}")
+
+
+# ---- worker-host wire: resolved scenarios, policies, chunk dispatches ------
+
+
+def scenario_to_wire(s: Scenario) -> dict:
+    """A fully *resolved* scenario as plain JSON (unlike the wire spec,
+    which carries axis tokens): what a remote worker host needs to execute
+    the exact simulation the scheduler content-addressed."""
+    dram = dataclasses.asdict(s.dram)
+    cfg = dataclasses.asdict(s.config)
+    cfg["optimizations"] = sorted(s.config.optimizations)
+    return dict(graph=dataclasses.asdict(s.graph), accelerator=s.accelerator,
+                problem=s.problem, dram=dram, config=cfg, root=s.root,
+                label=s.label)
+
+
+def scenario_from_wire(d: dict) -> Scenario:
+    """Inverse of :func:`scenario_to_wire`; the reconstructed scenario is
+    hash-identical (``scenario_hash``) to the original, so remote results
+    land at the same content addresses."""
+    try:
+        dram = dict(d["dram"])
+        dram["mapping"] = AddressMapping(**dram["mapping"])
+        cfg = dict(d["config"])
+        cfg["optimizations"] = frozenset(cfg["optimizations"])
+        return Scenario(
+            graph=GraphSpec(**d["graph"]),
+            accelerator=d["accelerator"],
+            problem=d["problem"],
+            dram=DRAMConfig(**dram),
+            config=AccelConfig(**cfg),
+            root=int(d.get("root", 0)),
+            label=d.get("label", ""),
+        )
+    except (TypeError, KeyError, ValueError) as e:
+        raise ProtocolError(f"bad scenario: {e}")
+
+
+def policy_to_wire(policy: ExecutionPolicy | None) -> dict | None:
+    if policy is None:
+        return None
+    from repro.distributed.faults import plan_to_json
+
+    return dict(
+        timeout_s=policy.timeout_s,
+        retries=policy.retries,
+        backoff_s=policy.backoff_s,
+        fault_plan=(json.loads(plan_to_json(policy.fault_plan))
+                    if policy.fault_plan is not None else None),
+    )
+
+
+def policy_from_wire(d: dict | None) -> ExecutionPolicy | None:
+    if d is None:
+        return None
+    from repro.distributed.faults import plan_from_json
+
+    try:
+        plan = (plan_from_json(d["fault_plan"])
+                if d.get("fault_plan") else None)
+        return ExecutionPolicy(timeout_s=d.get("timeout_s"),
+                               retries=int(d.get("retries", 0)),
+                               backoff_s=float(d.get("backoff_s", 0.25)),
+                               fault_plan=plan)
+    except (TypeError, KeyError, ValueError) as e:
+        raise ProtocolError(f"bad policy: {e}")
+
+
+def action_to_wire(action) -> dict | None:
+    """A dispatch-time :class:`~repro.distributed.faults.FaultAction`."""
+    return None if action is None else dataclasses.asdict(action)
+
+
+def action_from_wire(d: dict | None):
+    if d is None:
+        return None
+    from repro.distributed.faults import FaultAction
+
+    try:
+        return FaultAction(**d)
+    except TypeError as e:
+        raise ProtocolError(f"bad fault action: {e}")
+
+
+def chunk_to_wire(chunk_id: int, scenarios, mode: str,
+                  policy: ExecutionPolicy | None, trace_hashes: bool,
+                  inject=None) -> dict:
+    """One chunk-dispatch event: exactly the ``run_chunk`` argument list,
+    JSON-rendered, plus the pool's chunk id for result correlation."""
+    return dict(type="chunk", chunk=int(chunk_id),
+                scenarios=[scenario_to_wire(s) for s in scenarios],
+                mode=mode, policy=policy_to_wire(policy),
+                trace_hashes=bool(trace_hashes),
+                inject=action_to_wire(inject))
+
+
+def chunk_from_wire(d: dict) -> tuple:
+    """-> ``(chunk_id, scenarios, mode, policy, trace_hashes, inject)``."""
+    try:
+        return (int(d["chunk"]),
+                [scenario_from_wire(s) for s in d["scenarios"]],
+                d["mode"],
+                policy_from_wire(d.get("policy")),
+                bool(d.get("trace_hashes", False)),
+                action_from_wire(d.get("inject")))
+    except (TypeError, KeyError, ValueError) as e:
+        raise ProtocolError(f"bad chunk message: {e}")
 
 
 _SEARCH_FIELDS = ("objective", "direction", "mode", "rank_over", "budget",

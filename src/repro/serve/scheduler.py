@@ -221,7 +221,6 @@ class SweepScheduler:
                      else WorkerPool(max(1, workers),
                                      initializer=worker_mod.init_worker,
                                      task_deadline_s=worker_deadline_s))
-        self._max_inflight = 2 * getattr(self.pool, "size", workers)
 
         self.journal = JobJournal(cache_dir) if cache_dir else None
         if self.journal is not None:
@@ -595,6 +594,16 @@ class SweepScheduler:
         return True
 
     # ---- dispatch ----------------------------------------------------------
+
+    @property
+    def _max_inflight(self) -> int:
+        """In-flight chunk window: 2x the pool's *current* capacity.  Read
+        per dispatch round, never cached — a
+        :class:`~repro.distributed.remote.RemoteWorkerPool` starts at zero
+        seats and grows as worker hosts register, so the window must track
+        it live.  The floor keeps a couple of chunks staged inside an
+        empty remote pool, ready the moment the first host connects."""
+        return 2 * max(1, getattr(self.pool, "size", 1))
 
     def _dispatch_loop(self) -> None:
         while True:

@@ -42,6 +42,23 @@ def canonical_json(obj) -> str:
     return json.dumps(obj, sort_keys=True, separators=(",", ":"))
 
 
+def fsync_dir(path: str) -> None:
+    """fsync a directory so a just-created or just-renamed entry in it
+    survives a crash: POSIX only guarantees the rename/creation itself is
+    durable once the *directory* has reached disk.  Best effort — platforms
+    that cannot open a directory read-only simply skip it."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def scenario_key(s: Scenario) -> dict:
     """The full identity dict hashed into the cache address."""
     return dict(
@@ -204,6 +221,9 @@ class ResultCache:
                 # even across a crash: data reaches disk before the name
                 os.fsync(f.fileno())
             os.replace(tmp, path)
+            # ... and the rename itself reaches disk before callers treat
+            # the record as durable
+            fsync_dir(os.path.dirname(path))
             self._memoize(h, record)
         except BaseException:
             if os.path.exists(tmp):

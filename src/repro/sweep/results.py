@@ -90,6 +90,10 @@ def scenario_row(scenario, record: dict, status: str | None = None) -> dict | No
             row["poison"] = True
     else:
         return None
+    if record.get("timeout_enforced") is False:
+        # the policy asked for a per-scenario bound but SIGALRM was not
+        # available (non-main-thread execution): the row says so
+        row["timeout_enforced"] = False
     return row
 
 

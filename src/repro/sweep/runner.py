@@ -126,8 +126,11 @@ class ExecutionPolicy:
 
     timeout_s: best-effort per-scenario wall-clock bound (SIGALRM-based, so
       it needs the executing thread to be the process main thread — true for
-      serial runs and spawn-pool workers; elsewhere it is skipped).  A long
-      C-level call delays delivery until control returns to the interpreter.
+      serial runs and spawn-pool workers; elsewhere it is skipped and the
+      record carries ``timeout_enforced: false`` so rows stay honest about
+      policy coverage).  A long C-level call delays delivery until control
+      returns to the interpreter.  A previously armed ITIMER_REAL is
+      restored (minus elapsed time) on the way out.
     retries: how many times a failed/timed-out scenario re-executes.
     backoff_s: base of the exponential retry backoff — see ``backoff_for``.
     fault_plan: optional :class:`repro.distributed.faults.FaultPlan`
@@ -171,31 +174,46 @@ class ScenarioTimeout(BaseException):
 
 def _execute_with_timeout(scenario: Scenario, timeout_s: float | None,
                           with_trace_hash: bool) -> dict:
-    if (timeout_s is None
-            or threading.current_thread() is not threading.main_thread()):
+    if timeout_s is None:
         return execute_scenario(scenario, with_trace_hash=with_trace_hash)
+    if threading.current_thread() is not threading.main_thread():
+        # SIGALRM only fires on the main thread; the scenario runs
+        # unbounded, and the record says so (``timeout_enforced: false``
+        # flows into the exported row) instead of silently claiming the
+        # policy's bound was applied.
+        rec = execute_scenario(scenario, with_trace_hash=with_trace_hash)
+        rec["timeout_enforced"] = False
+        return rec
 
     def on_alarm(signum, frame):
         raise ScenarioTimeout
 
     t0 = time.time()
-    old = signal.signal(signal.SIGALRM, on_alarm)
+    t0_mono = time.monotonic()
+    old_handler = signal.signal(signal.SIGALRM, on_alarm)
+    # setitimer returns the timer it displaced; a caller further up the
+    # stack (nested policied execution, a host harness with its own alarm)
+    # may have one pending, and it must survive us
+    old_delay, old_interval = signal.setitimer(signal.ITIMER_REAL, timeout_s)
     try:
-        signal.setitimer(signal.ITIMER_REAL, timeout_s)
         try:
             return execute_scenario(scenario, with_trace_hash=with_trace_hash)
-        finally:
-            signal.setitimer(signal.ITIMER_REAL, 0.0)
-    except ScenarioTimeout:
-        return dict(
-            status="error",
-            error=(f"scenario timed out after {timeout_s}s "
-                   f"(--timeout-per-scenario)"),
-            timed_out=True,
-            wall_s=round(time.time() - t0, 3),
-        )
+        except ScenarioTimeout:
+            return dict(
+                status="error",
+                error=(f"scenario timed out after {timeout_s}s "
+                       f"(--timeout-per-scenario)"),
+                timed_out=True,
+                wall_s=round(time.time() - t0, 3),
+            )
     finally:
-        signal.signal(signal.SIGALRM, old)
+        # disarm before the old handler comes back, so a late alarm of
+        # ours can never invoke it
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old_handler)
+        if old_delay:
+            remaining = max(old_delay - (time.monotonic() - t0_mono), 1e-6)
+            signal.setitimer(signal.ITIMER_REAL, remaining, old_interval)
 
 
 def execute_scenario_policied(

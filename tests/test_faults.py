@@ -550,6 +550,99 @@ def test_fault_plan_exhausts_retries_with_audit():
     assert rec["last_error"].startswith("injected fault")
 
 
+# ---- supervision clock + timeout itimer + journal durability regressions ----
+
+
+def test_supervision_survives_wall_clock_step(monkeypatch):
+    """Satellite regression: every supervision deadline is measured on
+    ``time.monotonic()`` — an NTP/DST step of the wall clock must not make
+    healthy workers look stale or hung."""
+    import inspect
+    from repro.distributed import workpool as wp_mod
+    assert "time.time(" not in inspect.getsource(wp_mod)
+    pool = make_pool(stall_deadline_s=0.5)
+    try:
+        assert pool.submit(probe, None, 1).result(timeout=60)["value"] == 1
+        real = time.time
+        monkeypatch.setattr(time, "time", lambda: real() + 3600.0)
+        time.sleep(1.0)  # several stall deadlines under the stepped clock
+        assert pool.submit(probe, None, 2).result(timeout=60)["value"] == 2
+        s = pool.stats()
+        assert s["workers_lost"] == 0 and s["respawns"] == 0
+    finally:
+        pool.shutdown(wait=False, cancel_pending=True)
+
+
+def test_timeout_restores_outer_itimer_and_handler():
+    """Satellite regression: ``_execute_with_timeout`` must hand back the
+    SIGALRM timer it displaced (minus elapsed time) and the outer handler —
+    a caller with its own alarm keeps it."""
+    from repro.sweep.runner import _execute_with_timeout
+
+    (scn,), _ = tiny_spec().expand()
+
+    def outer_handler(signum, frame):  # pragma: no cover - must not fire
+        pytest.fail("outer alarm fired during the bounded scenario")
+
+    prev = signal.signal(signal.SIGALRM, outer_handler)
+    try:
+        signal.setitimer(signal.ITIMER_REAL, 120.0)
+        rec = _execute_with_timeout(scn, 60.0, False)
+        assert rec["status"] == "ok"
+        assert "timeout_enforced" not in rec  # main thread: bound applied
+        remaining, _ = signal.getitimer(signal.ITIMER_REAL)
+        assert 0 < remaining < 120.0  # rearmed, elapsed time deducted
+        assert signal.getsignal(signal.SIGALRM) is outer_handler
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, prev)
+
+
+def test_timeout_off_main_thread_is_flagged_not_faked():
+    """Satellite regression: off the main thread SIGALRM cannot fire, so
+    the scenario runs unbounded and the record (and exported row) says
+    ``timeout_enforced: false`` instead of claiming the bound held."""
+    from repro.sweep.runner import _execute_with_timeout
+
+    (scn,), _ = tiny_spec().expand()
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.update(rec=_execute_with_timeout(scn, 60.0,
+                                                            False)))
+    t.start()
+    t.join(timeout=120)
+    assert not t.is_alive()
+    rec = out["rec"]
+    assert rec["status"] == "ok" and rec["timeout_enforced"] is False
+    assert scenario_row(scn, rec)["timeout_enforced"] is False
+
+
+def test_journal_fsyncs_directory_entry(tmp_path, monkeypatch):
+    """Satellite regression: the first append fsyncs the journal's
+    *directory* (the file's existence must survive a crash, not just its
+    bytes), later appends don't pay it again, and compaction re-syncs
+    after its rename."""
+    import stat
+
+    synced_dirs = []
+    real_fsync = os.fsync
+
+    def spy(fd):
+        if stat.S_ISDIR(os.fstat(fd).st_mode):
+            synced_dirs.append(fd)
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy)
+    j = JobJournal(tmp_path)
+    j.record_job("job-1", "a", dict(name="a"))
+    assert len(synced_dirs) == 1  # creation made durable
+    j.record_end("job-1", "done")
+    j.record_job("job-2", "b", dict(name="b"))
+    assert len(synced_dirs) == 1  # steady-state appends skip the dirfd
+    assert j.compact() == 2
+    assert len(synced_dirs) == 2  # the compaction rename made durable
+
+
 # ---- SIGTERM drain under load with a hung, fault-injected worker ------------
 
 
